@@ -1,0 +1,65 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    compression_ratio,
+    cusz_hi_cr,
+    cusz_hi_crz,
+    cusz_hi_tp,
+    cusz_i,
+    cusz_l,
+    cuszp2_like,
+    fzgpu_like,
+    max_abs_err,
+    psnr,
+)
+from repro.data import load_or_generate
+
+COMPRESSORS = {
+    "cuSZ-Hi-CR": cusz_hi_cr,
+    "cuSZ-Hi-TP": cusz_hi_tp,
+    "cuSZ-Hi-CRZ": cusz_hi_crz,  # beyond-paper mode
+    "cuSZ-L": cusz_l,
+    "cuSZ-I": cusz_i,
+    "cuSZp2-like": cuszp2_like,
+    "FZGPU-like": fzgpu_like,
+}
+
+DATASETS = ["cesm", "jhtdb", "miranda", "nyx", "qmcpack", "rtm"]
+
+
+def get_data(name: str, *, full: bool = False, data_dir: str | None = None) -> np.ndarray:
+    x = load_or_generate(name, data_dir)
+    if not full:  # bounded runtime: central crop to <= ~8 MiB
+        slices = []
+        budget = int(round((2 * 1024 * 1024) ** (1.0 / x.ndim)))
+        for d in x.shape:
+            take = min(d, max(budget, 32))
+            start = (d - take) // 2
+            slices.append(slice(start, start + take))
+        x = np.ascontiguousarray(x[tuple(slices)])
+    return x
+
+
+def run_case(comp_factory, eb: float, x: np.ndarray) -> dict:
+    c = comp_factory(eb=eb)
+    t0 = time.time()
+    buf = c.compress(x)
+    t1 = time.time()
+    y = c.decompress(buf)
+    t2 = time.time()
+    rng = float(x.max() - x.min())
+    return {
+        "cr": compression_ratio(x, buf),
+        "psnr": psnr(x, y),
+        "maxerr_rel": max_abs_err(x, y) / max(rng, 1e-30),
+        "comp_gibs": x.nbytes / max(t1 - t0, 1e-9) / 2**30,
+        "decomp_gibs": x.nbytes / max(t2 - t1, 1e-9) / 2**30,
+        "comp_us": (t1 - t0) * 1e6,
+        "decomp_us": (t2 - t1) * 1e6,
+        "ok": max_abs_err(x, y) <= eb * rng * (1 + 1e-4) + 1e-9,
+    }

@@ -1,0 +1,54 @@
+"""Figure 10: compression/decompression throughput (CPU-proxy GiB/s).
+
+The paper measures GPU kernel throughput on A100/RTX6000Ada; this container
+is CPU-only, so absolute numbers are a proxy — the *relative* ordering of
+pipeline costs (TP mode > CR mode; Huffman dominates CR-mode time) is the
+reproducible claim. Stage-level timings are also reported.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.lossless import pipelines as pp
+
+from .common import COMPRESSORS, get_data, run_case
+
+
+def run(*, full: bool = False, data_dir: str | None = None, datasets=("nyx",), ebs=(1e-2, 1e-3)):
+    rows = []
+    for ds in datasets:
+        x = get_data(ds, full=full, data_dir=data_dir)
+        for eb in ebs:
+            for name, mk in COMPRESSORS.items():
+                r = run_case(mk, eb, x)
+                rows.append({
+                    "table": "fig10", "dataset": ds, "eb": eb, "compressor": name,
+                    "comp_gibs": round(r["comp_gibs"], 4), "decomp_gibs": round(r["decomp_gibs"], 4),
+                    "comp_us": round(r["comp_us"], 1), "decomp_us": round(r["decomp_us"], 1),
+                })
+        # stage-level: lossless pipelines on a representative code stream
+        from repro.core import Compressor, CompressorSpec
+
+        c = Compressor(CompressorSpec(eb=1e-3, pipeline="none", autotune=False))
+        buf = c.compress(x)
+        import json
+
+        from repro.core.compressor import _sections_unpack
+
+        _, sections = _sections_unpack(buf)
+        codes = np.frombuffer(pp.decode(sections[0]), np.uint8)
+        for pipe in ("cr", "tp", "hf", "fz"):
+            t0 = time.time()
+            enc = pp.encode(codes, pipe)
+            t1 = time.time()
+            pp.decode(enc)
+            t2 = time.time()
+            rows.append({
+                "table": "fig10-stages", "dataset": ds, "compressor": f"pipeline:{pipe}",
+                "comp_gibs": round(codes.nbytes / max(t1 - t0, 1e-9) / 2**30, 4),
+                "decomp_gibs": round(codes.nbytes / max(t2 - t1, 1e-9) / 2**30, 4),
+                "cr": round(codes.nbytes / len(enc), 2),
+            })
+    return rows

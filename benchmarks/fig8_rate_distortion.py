@@ -1,0 +1,22 @@
+"""Figure 8: rate-distortion (bitrate vs decompression PSNR) curves."""
+from __future__ import annotations
+
+from repro.core import bit_rate
+
+from .common import COMPRESSORS, get_data, run_case
+
+EBS = [5e-2, 1e-2, 5e-3, 1e-3, 5e-4, 1e-4]
+
+
+def run(*, full: bool = False, data_dir: str | None = None, datasets=("jhtdb", "miranda"), ebs=None):
+    rows = []
+    for ds in datasets:
+        x = get_data(ds, full=full, data_dir=data_dir)
+        for name, mk in COMPRESSORS.items():
+            for eb in ebs or EBS:
+                r = run_case(mk, eb, x)
+                rows.append({
+                    "table": "fig8", "dataset": ds, "compressor": name, "eb": eb,
+                    "bitrate": 32.0 / max(r["cr"], 1e-9), "psnr": round(r["psnr"], 2), "cr": r["cr"],
+                })
+    return rows

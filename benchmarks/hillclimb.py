@@ -1,0 +1,74 @@
+"""§Perf hillclimb driver: re-lower a cell under a config/rules variant and
+report the roofline deltas vs the stored baseline.
+
+    python -m benchmarks.hillclimb --arch gemma3-12b --shape long_500k \
+        --tag kvq --cfg kv_quant=1
+
+Results land in experiments/dryrun/<cell>__pod1__<tag>.json and print the
+three roofline terms next to the baseline's.
+"""
+from __future__ import annotations
+
+# must precede jax/repro imports (512 fake devices)
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+import argparse
+import ast
+import json
+import pathlib
+import sys
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--cfg", nargs="*", help="ModelConfig overrides k=v")
+    ap.add_argument("--rules", nargs="*", help="activation-rule overrides k=v")
+    args = ap.parse_args(argv)
+
+    from benchmarks.roofline import analyze_record
+    from repro.launch.dryrun import run_cell
+
+    cfg_over = _parse_kv(args.cfg)
+    rules_over = _parse_kv(args.rules)
+    rec = run_cell(args.arch, args.shape, multi_pod=False, cfg_override=cfg_over or None,
+                   rules_override=rules_over or None, tag=args.tag)
+    name = f"{args.arch}__{args.shape}__pod1__{args.tag}"
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    new = analyze_record(rec)
+    base_f = OUT_DIR / f"{args.arch}__{args.shape}__pod1.json"
+    if base_f.exists():
+        base = analyze_record(json.loads(base_f.read_text()))
+        print("metric           baseline        variant         delta")
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s", "step_time_bound_s", "mem_gib_per_dev", "useful_ratio", "roofline_frac"):
+            b, n = base[k], new[k]
+            try:
+                d = (float(n) - float(b)) / max(abs(float(b)), 1e-30) * 100.0
+                print(f"{k:16s} {b:>14} {n:>14}  {d:+7.1f}%")
+            except (TypeError, ValueError):
+                print(f"{k:16s} {b:>14} {n:>14}")
+        print("bottleneck:", base["bottleneck"], "->", new["bottleneck"])
+    else:
+        print(json.dumps(new, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+  compute    = flops_per_device / 197e12           (v5e bf16 peak)
+  memory     = bytes_per_device / 819e9            (HBM BW)
+  collective = collective_bytes_per_device / 50e9  (ICI per link)
+plus MODEL_FLOPS (6ND dense / 6·N_active·D MoE; 2N per token decode) and the
+useful-compute ratio MODEL_FLOPS / (flops_per_device * n_devices).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import active_param_count, param_count
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    seq, gbatch, kind = SHAPES[shape]
+    n = active_param_count(cfg) if cfg.n_experts else param_count(cfg)
+    if kind == "train":
+        return 6.0 * n * seq * gbatch
+    if kind == "prefill":
+        return 2.0 * n * seq * gbatch
+    return 2.0 * n * gbatch  # decode: one token
+
+
+def analyze_record(rec: dict) -> dict:
+    tot = rec.get("cost_total") or rec.get("cost") or {}
+    colls = rec.get("collectives_total") or rec.get("collectives") or {}
+    ndev = rec.get("n_partitions", 256)
+    flops = float(tot.get("flops", 0.0))
+    byt = float(tot.get("bytes", 0.0))
+    coll = float(sum(v for k, v in colls.items() if "/" not in k))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byt / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(flops * ndev, 1e-30)
+    mem = rec.get("memory", {})
+    perdev_gib = ((mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)) / 2**30
+    bound = max(terms.values())
+    return {
+        "table": "roofline",
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "t_compute_s": f"{t_compute:.3e}",
+        "t_memory_s": f"{t_memory:.3e}",
+        "t_collective_s": f"{t_coll:.3e}",
+        "bottleneck": dom,
+        "model_flops": f"{mf:.3e}",
+        "useful_ratio": round(useful, 3),
+        "roofline_frac": round(t_compute / max(bound, 1e-30), 3),
+        "mem_gib_per_dev": round(perdev_gib, 2),
+        "step_time_bound_s": f"{bound:.3e}",
+    }
+
+
+def run(tag: str = "", pod: str = "pod1"):
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{pod}{('__' + tag) if tag else ''}.json")):
+        if not tag and f.stem.count("__") != 2:
+            continue
+        rec = json.loads(f.read_text())
+        rows.append(analyze_record(rec))
+    return rows

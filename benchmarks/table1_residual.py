@@ -1,0 +1,25 @@
+"""Table 1: residual compressibility of each compressor's OUTPUT.
+
+The paper probes with NVIDIA Bitcomp; we probe with zstd (DESIGN.md §7.3).
+A ratio near 1.0 means the pipeline left no redundancy behind (cuSZ-Hi's
+claim); large ratios indicate under-used correlation (cuSZ-L, cuSZp2...)."""
+from __future__ import annotations
+
+import zstandard
+
+from .common import COMPRESSORS, get_data
+
+
+def run(*, full: bool = False, data_dir: str | None = None, datasets=("nyx",), eb=1e-2):
+    rows = []
+    cctx = zstandard.ZstdCompressor(level=3)
+    for ds in datasets:
+        x = get_data(ds, full=full, data_dir=data_dir)
+        for name, mk in COMPRESSORS.items():
+            buf = mk(eb=eb).compress(x)
+            probe = cctx.compress(buf)
+            rows.append({
+                "table": "table1", "dataset": ds, "eb": eb, "compressor": name,
+                "residual_cr": round(len(buf) / max(len(probe), 1), 3),
+            })
+    return rows

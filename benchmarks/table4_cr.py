@@ -1,0 +1,26 @@
+"""Table 4: fixed-error-bound compression ratio per (dataset x eb x compressor)."""
+from __future__ import annotations
+
+from .common import COMPRESSORS, DATASETS, get_data, run_case
+
+EBS = [1e-2, 1e-3, 1e-4]
+
+
+def run(*, full: bool = False, data_dir: str | None = None, datasets=None, ebs=None):
+    rows = []
+    for ds in datasets or DATASETS:
+        x = get_data(ds, full=full, data_dir=data_dir)
+        for eb in ebs or EBS:
+            best_hi, best_base = 0.0, 0.0
+            for name, mk in COMPRESSORS.items():
+                r = run_case(mk, eb, x)
+                rows.append({"table": "table4", "dataset": ds, "eb": eb, "compressor": name, **r})
+                if name.startswith("cuSZ-Hi"):
+                    best_hi = max(best_hi, r["cr"])
+                else:
+                    best_base = max(best_base, r["cr"])
+            rows.append({
+                "table": "table4", "dataset": ds, "eb": eb, "compressor": "ADV%",
+                "cr": round(100.0 * (best_hi / max(best_base, 1e-9) - 1.0), 1),
+            })
+    return rows

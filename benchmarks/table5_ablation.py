@@ -1,0 +1,55 @@
+"""Table 5: ablation — incremental cuSZ-Hi features over the cuSZ-I(B) base.
+
+Increments (paper order):
+  cusz-ib      : stride-8 anchors, 3 levels, 1D scheme, HF (+zstd as the
+                 Bitcomp stand-in)
+  +partition   : stride-16 anchors / 17^3 isotropic blocks (4 levels)
+  +reorder     : level-grouped code mapping (Eq. 3)
+  +md+autotune : multi-dimensional interpolation + per-level auto-tuning
+  cusz-hi-cr   : full open-source CR lossless pipeline
+"""
+from __future__ import annotations
+
+import zstandard
+
+from repro.core import Compressor, CompressorSpec
+
+from .common import get_data
+
+_STEPS = [
+    ("cusz-ib", CompressorSpec(predictor="interp", pipeline="hf", anchor_stride=8, autotune=False,
+                               splines=("cubic",) * 3, schemes=("1d",) * 3, reorder=False), True),
+    ("+partition", CompressorSpec(predictor="interp", pipeline="hf", anchor_stride=16, autotune=False,
+                                  splines=("cubic",) * 4, schemes=("1d",) * 4, reorder=False), True),
+    ("+reorder", CompressorSpec(predictor="interp", pipeline="hf", anchor_stride=16, autotune=False,
+                                splines=("cubic",) * 4, schemes=("1d",) * 4, reorder=True), True),
+    ("+md+autotune", CompressorSpec(predictor="interp", pipeline="hf", anchor_stride=16, autotune=True,
+                                    reorder=True), True),
+    ("cusz-hi-cr", CompressorSpec(predictor="interp", pipeline="cr", anchor_stride=16, autotune=True,
+                                  reorder=True), False),
+    ("cusz-hi-crz(beyond)", CompressorSpec(predictor="interp", pipeline="crz", anchor_stride=16, autotune=True,
+                                           reorder=True), False),
+]
+
+
+def run(*, full: bool = False, data_dir: str | None = None, datasets=("jhtdb", "miranda", "nyx", "rtm"), ebs=(1e-2, 1e-3)):
+    rows = []
+    cctx = zstandard.ZstdCompressor(level=3)
+    for ds in datasets:
+        x = get_data(ds, full=full, data_dir=data_dir)
+        for eb in ebs:
+            prev = None
+            for name, spec, add_zstd in _STEPS:
+                import dataclasses
+
+                c = Compressor(dataclasses.replace(spec, eb=eb))
+                buf = c.compress(x)
+                size = len(cctx.compress(buf)) if add_zstd else len(buf)
+                cr = x.nbytes / size
+                rows.append({
+                    "table": "table5", "dataset": ds, "eb": eb, "variant": name,
+                    "cr": round(cr, 2),
+                    "delta_pct": round(100.0 * (cr / prev - 1.0), 1) if prev else 0.0,
+                })
+                prev = cr
+    return rows

@@ -1,0 +1,22 @@
+"""Quickstart: compress a scientific field with cuSZ-Hi, inspect quality.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import compression_ratio, cusz_hi_cr, cusz_hi_tp, max_abs_err, psnr
+from repro.data import get_field
+
+field = get_field("nyx")[:128, :128, :128]  # synthetic cosmology-like field
+print(f"field: {field.shape} {field.dtype} ({field.nbytes/2**20:.1f} MiB)")
+
+for name, make in [("CR mode", cusz_hi_cr), ("TP mode", cusz_hi_tp)]:
+    comp = make(eb=1e-3)  # value-range-relative error bound
+    blob = comp.compress(field)
+    recon = comp.decompress(blob)
+    rng = field.max() - field.min()
+    print(
+        f"{name}: CR={compression_ratio(field, blob):7.2f}  "
+        f"PSNR={psnr(field, recon):6.2f} dB  "
+        f"max|err|/range={max_abs_err(field, recon)/rng:.2e} (bound 1e-3)"
+    )

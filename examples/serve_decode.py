@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests: prefill + token-by-token decode
+(the decode path is what the decode_32k / long_500k dry-run cells lower).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
+"""
+import argparse
+
+from repro.launch.serve import main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="recurrentgemma-2b")
+args = ap.parse_args()
+
+raise SystemExit(main(["--arch", args.arch, "--scaled", "--batch", "4", "--prompt-len", "16", "--tokens", "16"]))

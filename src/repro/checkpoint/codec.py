@@ -1,0 +1,55 @@
+"""Tensor (de)serialization through the cuSZ-Hi codec.
+
+Two modes per tensor:
+  * lossless: raw bytes + zstd (bit-exact; default for optimizer state and
+    anything integer/small);
+  * error-bounded: the paper's full pipeline (interp predictor + CR
+    pipeline) on float tensors reshaped to a 2-D field — weights are not
+    spatially smooth like simulation data, so the autotuner typically picks
+    linear splines; CR is reported honestly in the manifest.
+"""
+from __future__ import annotations
+
+import numpy as np
+import zstandard
+
+from repro.core import Compressor, CompressorSpec
+
+_ZSTD_LEVEL = 3
+
+
+def _as_field(x: np.ndarray) -> np.ndarray:
+    """Reshape an arbitrary tensor to >=2-D for the block predictor."""
+    flat = x.reshape(-1)
+    n = flat.size
+    w = 1
+    for cand in (4096, 2048, 1024, 512, 256, 128, 64):
+        if n % cand == 0:
+            w = cand
+            break
+    return flat.reshape(-1, w) if w > 1 else flat.reshape(1, -1)
+
+
+def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
+    """eb = 0 -> lossless; eb > 0 -> value-range-relative error bound."""
+    meta = {"shape": list(x.shape), "dtype": str(x.dtype)}
+    if eb > 0 and x.dtype in (np.float32, np.float64) and x.size >= 4096:
+        comp = Compressor(CompressorSpec(eb=eb, pipeline="tp", autotune=False))
+        field = _as_field(x.astype(np.float32))
+        payload = comp.compress(field)
+        meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape))
+        return payload, meta
+    cctx = zstandard.ZstdCompressor(level=_ZSTD_LEVEL)
+    meta.update(mode="zstd")
+    return cctx.compress(np.ascontiguousarray(x).tobytes()), meta
+
+
+def decode_tensor(payload: bytes, meta: dict) -> np.ndarray:
+    shape = tuple(meta["shape"])
+    dtype = np.dtype(meta["dtype"])
+    if meta["mode"] == "cuszhi":
+        comp = Compressor(CompressorSpec(eb=meta["eb"], pipeline="tp", autotune=False))
+        field = comp.decompress(payload)
+        return field.reshape(-1)[: int(np.prod(shape))].reshape(shape).astype(dtype)
+    raw = zstandard.ZstdDecompressor().decompress(payload)
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()

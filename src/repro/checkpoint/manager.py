@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing.
+
+Layout: <dir>/step_<N>/  one file per leaf + manifest.json; writes go to a
+temp directory first, fsync'd, then atomically renamed — a crash mid-save
+never corrupts the latest checkpoint. Checkpoints are mesh-agnostic
+(leaves saved unsharded-logical); restore reshards onto any mesh (elastic
+rescale). Async save runs on a daemon thread with a single-slot queue so
+training never blocks more than one pending snapshot.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import queue
+import shutil
+import threading
+import uuid
+
+import jax
+import numpy as np
+
+from .codec import decode_tensor, encode_tensor
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "_".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save(tree, directory: str | os.PathLike, step: int, *, eb: float = 0.0) -> dict:
+    """Synchronous atomic save. Returns the manifest."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    # unique tmp dir: concurrent savers (async worker + final sync save)
+    # must never stomp each other's in-flight files
+    tmp = directory / f".tmp_step_{step:08d}_{uuid.uuid4().hex[:8]}"
+    tmp.mkdir(parents=True)
+    manifest = {"step": int(step), "leaves": {}, "format": 1}
+    raw_total = comp_total = 0
+    for key, leaf in _leaf_paths(tree):
+        arr = np.asarray(leaf)
+        payload, meta = encode_tensor(arr, eb=eb)
+        fn = f"{key}.bin"
+        with open(tmp / fn, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"][key] = dict(meta, file=fn, bytes=len(payload))
+        raw_total += arr.nbytes
+        comp_total += len(payload)
+    manifest["raw_bytes"] = int(raw_total)
+    manifest["compressed_bytes"] = int(comp_total)
+    manifest["cr"] = round(raw_total / max(comp_total, 1), 3)
+    with open(tmp / _MANIFEST, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+    return manifest
+
+
+def latest_step(directory: str | os.PathLike) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for d in directory.iterdir():
+        if d.name.startswith("step_") and (d / _MANIFEST).exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(tree_like, directory: str | os.PathLike, step: int | None = None, *, shardings=None):
+    """Restore into the structure of `tree_like` (ShapeDtypeStructs ok).
+
+    `shardings`: optional pytree of NamedSharding — leaves are placed
+    shard-by-shard onto the (possibly different) mesh: elastic restore."""
+    directory = pathlib.Path(directory)
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / _MANIFEST).read_text())
+    keys = [k for k, _ in _leaf_paths(tree_like)]
+    flat_sh = [None] * len(keys)
+    if shardings is not None:
+        flat_sh = [s for _, s in _leaf_paths(shardings)]
+    leaves = []
+    for key, sh in zip(keys, flat_sh):
+        meta = manifest["leaves"][key]
+        payload = (d / meta["file"]).read_bytes()
+        arr = decode_tensor(payload, meta)
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+class AsyncCheckpointer:
+    """Single-slot background saver: at most one pending snapshot, newer
+    requests replace queued ones (training never waits on I/O)."""
+
+    def __init__(self, directory: str | os.PathLike, *, eb: float = 0.0):
+        self.directory = pathlib.Path(directory)
+        self.eb = eb
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree, step = item
+            try:
+                save(tree, self.directory, step, eb=self.eb)
+            except Exception as e:  # noqa: BLE001
+                self._err = e
+
+    def submit(self, tree, step: int):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot now
+        try:
+            self._q.put_nowait((host_tree, step))
+        except queue.Full:
+            try:
+                self._q.get_nowait()  # drop the stale pending snapshot
+            except queue.Empty:
+                pass
+            self._q.put_nowait((host_tree, step))
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join(timeout=60)
+        if self._err:
+            raise self._err

@@ -1,0 +1,13 @@
+"""repro.core — cuSZ-Hi: synergistic lossy-lossless compression in JAX."""
+from .compressor import (  # noqa: F401
+    Compressor,
+    CompressorSpec,
+    cusz_hi_cr,
+    cusz_hi_crz,
+    cusz_hi_tp,
+    cusz_i,
+    cusz_l,
+    cuszp2_like,
+    fzgpu_like,
+)
+from .metrics import bit_rate, compression_ratio, max_abs_err, psnr  # noqa: F401

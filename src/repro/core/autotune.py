@@ -1,0 +1,70 @@
+"""Workload-balanced interpolation auto-tuning (paper §5.1.3).
+
+Uniformly samples ~0.2 % of the blocks and, level by level from the largest
+stride, tests every (spline x scheme) configuration on the sampled blocks,
+keeping the per-level argmin of the aggregated absolute prediction error.
+The chosen config is then applied (with quantization feedback) before the
+next level is tuned — mirroring the paper's per-level selection.
+
+On the GPU the paper balances thread blocks per level; the TPU analogue is
+the sample volume itself (the per-level tests here are a handful of small
+batched matmuls), kept at the paper's 0.2 % budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .predictor import RADIUS, _anchor_mask, _predict
+from .stencils import SCHEMES, SPLINES, build_steps
+
+SAMPLE_FRACTION = 0.002
+MIN_SAMPLE_BLOCKS = 8
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _level_pass(recon, orig, twoeb, steps, update: bool):
+    """Run one level's steps; return (new_recon, sum |orig-pred| over targets)."""
+    err = jnp.zeros((), jnp.float32)
+    for step in steps:
+        pred = _predict(recon, step)
+        m = jnp.asarray(step.mask)
+        err = err + jnp.sum(jnp.where(m, jnp.abs(orig - pred), 0.0))
+        q = jnp.rint((orig - pred) / twoeb)
+        outl = jnp.abs(q) > RADIUS
+        rec = jnp.where(outl, orig, pred + q * twoeb)
+        recon = jnp.where(m, rec, recon)
+    return recon, err
+
+
+def autotune(blocks: np.ndarray, twoeb: float, levels=(8, 4, 2, 1), anchor_every: int = 16, rng_seed: int = 0):
+    """blocks: (nb, B..). Returns (splines, schemes) tuples, one entry per level."""
+    nb = blocks.shape[0]
+    ndim = blocks.ndim - 1
+    B = blocks.shape[1]
+    ns = max(MIN_SAMPLE_BLOCKS, int(round(SAMPLE_FRACTION * nb)))
+    ns = min(ns, nb)
+    idx = np.linspace(0, nb - 1, ns).astype(np.int64)  # uniform sampling (paper)
+    sample = jnp.asarray(blocks[idx])
+    am = jnp.asarray(_anchor_mask(sample.shape[1:], anchor_every))
+    recon = jnp.where(am, sample, 0.0)
+    twoeb = jnp.float32(twoeb)
+    chosen_splines, chosen_schemes = [], []
+    for li, s in enumerate(levels):
+        best = None
+        for spline in SPLINES:
+            for scheme in SCHEMES:
+                steps = build_steps(ndim, B, (s,), (spline,), (scheme,))
+                _, err = _level_pass(recon, sample, twoeb, steps, False)
+                err = float(err)
+                if best is None or err < best[0]:
+                    best = (err, spline, scheme)
+        _, spline, scheme = best
+        chosen_splines.append(spline)
+        chosen_schemes.append(scheme)
+        steps = build_steps(ndim, B, (s,), (spline,), (scheme,))
+        recon, _ = _level_pass(recon, sample, twoeb, steps, True)
+    return tuple(chosen_splines), tuple(chosen_schemes)

@@ -1,0 +1,88 @@
+"""Block partitioning for the cuSZ-Hi predictor.
+
+The paper (§5.1.1) partitions the field into isotropic 17^ndim blocks whose
+corners are the losslessly-stored anchor points (anchor stride 16 per dim).
+Adjacent blocks share their boundary faces; face points are predicted
+identically by both owners (a face point's stencil never leaves the face),
+so overlapping scatter writes are value-identical and ownership is exact.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+ANCHOR_STRIDE = 16
+BLOCK = ANCHOR_STRIDE + 1  # 17: closed block [0, 16]^ndim
+
+
+def padded_shape(shape: tuple[int, ...], stride: int = ANCHOR_STRIDE) -> tuple[int, ...]:
+    """Each dim padded up to k*stride + 1 so every block is complete."""
+    out = []
+    for d in shape:
+        k = max(1, -(-max(d - 1, 1) // stride))  # ceil((d-1)/stride), >= 1
+        out.append(k * stride + 1)
+    return tuple(out)
+
+
+def pad_field(x: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """Edge-replicate pad to the block grid shape."""
+    tgt = padded_shape(x.shape, stride)
+    pads = [(0, t - s) for s, t in zip(x.shape, tgt)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return np.pad(x, pads, mode="edge")
+
+
+def gather_blocks(xp: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """(padded field) -> (nb, B, B, ...) overlapping closed blocks.
+
+    nb = prod((dim-1)/stride); block [i] = xp[stride*i : stride*i + B].
+    """
+    B = stride + 1
+    win = np.lib.stride_tricks.sliding_window_view(xp, (B,) * xp.ndim)
+    sl = tuple(slice(None, None, stride) for _ in range(xp.ndim))
+    blocks = win[sl]  # (nb0, nb1, ..., B, B, ...)
+    nb = int(np.prod(blocks.shape[: xp.ndim]))
+    return np.ascontiguousarray(blocks.reshape((nb,) + (B,) * xp.ndim))
+
+
+def block_grid(shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE) -> tuple[int, ...]:
+    return tuple((d - 1) // stride for d in shape_padded)
+
+
+def scatter_blocks(blocks: np.ndarray, shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """Inverse of gather_blocks. Overlapping faces are value-identical, so each
+    block owns its half-open [0, stride)^ndim cells plus the global far faces."""
+    ndim = len(shape_padded)
+    nbs = block_grid(shape_padded, stride)
+    out = np.empty(shape_padded, dtype=blocks.dtype)
+    bl = blocks.reshape(nbs + (stride + 1,) * ndim)
+    for far in itertools.product((False, True), repeat=ndim):
+        # destination region: interior cells on non-far dims, last plane on far dims
+        dst = tuple(slice(0, shape_padded[d] - 1) if not far[d] else slice(shape_padded[d] - 1, shape_padded[d]) for d in range(ndim))
+        # source: all blocks/cells 0..stride-1 on non-far dims; last block, cell=stride on far dims
+        src_blk = tuple(slice(None) if not far[d] else slice(nbs[d] - 1, nbs[d]) for d in range(ndim))
+        src_cell = tuple(slice(0, stride) if not far[d] else slice(stride, stride + 1) for d in range(ndim))
+        sub = bl[src_blk + src_cell]  # (nb0',..,c0',..)
+        # interleave block/cell axes -> spatial
+        perm = []
+        for d in range(ndim):
+            perm += [d, ndim + d]
+        sub = np.transpose(sub, perm)
+        new_shape = tuple(sub.shape[2 * d] * sub.shape[2 * d + 1] for d in range(ndim))
+        out[dst] = sub.reshape(new_shape)
+    return out
+
+
+def anchor_grid(xp: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """Losslessly stored anchors: every coordinate divisible by the stride."""
+    sl = tuple(slice(None, None, stride) for _ in range(xp.ndim))
+    return np.ascontiguousarray(xp[sl])
+
+
+def place_anchors(shape_padded: tuple[int, ...], anchors: np.ndarray, stride: int = ANCHOR_STRIDE, dtype=np.float32) -> np.ndarray:
+    out = np.zeros(shape_padded, dtype=dtype)
+    sl = tuple(slice(None, None, stride) for _ in range(len(shape_padded)))
+    out[sl] = anchors
+    return out

@@ -1,0 +1,276 @@
+"""cuSZ-Hi top-level compressor (the paper's full pipeline, §4-§5).
+
+compress():  pad -> [autotune] -> interpolation predict+quantize (blocks,
+jit/Pallas) -> scatter codes -> level-reorder (Eq.3) -> lossless pipeline
+(CR: hf-rre4-tcms8-rze1 / TP: tcms1-bit1-rre1) -> container with anchors +
+outliers.  decompress() replays the identical arithmetic from the codes.
+
+Error-bound contract: ||x - decompress(compress(x))||_inf <= eb_abs,
+where eb_abs = eb * value_range(x) in the paper's default "rel" mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocks as blk
+from . import lorenzo as lor
+from .autotune import autotune
+from .lossless import pipelines
+from .lossless.flenc import fl_decode, fl_encode
+from .predictor import compress_blocks, decompress_blocks
+from .reorder import flat_permutation, level_permutation, reorder_codes, restore_codes
+from .stencils import build_steps
+
+MAGIC = b"CSZH1\n"
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorSpec:
+    eb: float = 1e-3
+    eb_mode: str = "rel"                  # "rel": eb * value range (paper); "abs"
+    predictor: str = "interp"             # interp | lorenzo | offset1d
+    pipeline: str = "cr"                  # cr | tp | hf | fz | none
+    anchor_stride: int = 16               # 16 = cuSZ-Hi; 8 = cuSZ-I layout
+    autotune: bool = True
+    splines: tuple = ("cubic", "cubic", "cubic", "cubic")
+    schemes: tuple = ("md", "md", "md", "md")
+    reorder: bool = True
+
+    @property
+    def levels(self) -> tuple:
+        lv, s = [], self.anchor_stride // 2
+        while s >= 1:
+            lv.append(s)
+            s //= 2
+        return tuple(lv)
+
+
+def _sections_pack(header: dict, sections: list[bytes]) -> bytes:
+    header = dict(header, _sizes=[len(s) for s in sections])
+    hj = json.dumps(header).encode()
+    return MAGIC + len(hj).to_bytes(8, "little") + hj + b"".join(sections)
+
+
+def _sections_unpack(buf: bytes):
+    assert buf[: len(MAGIC)] == MAGIC, "bad container magic"
+    off = len(MAGIC)
+    hlen = int.from_bytes(buf[off : off + 8], "little")
+    off += 8
+    header = json.loads(buf[off : off + hlen])
+    off += hlen
+    sections = []
+    for sz in header["_sizes"]:
+        sections.append(buf[off : off + sz])
+        off += sz
+    return header, sections
+
+
+class Compressor:
+    def __init__(self, spec: CompressorSpec | None = None, **kw):
+        self.spec = spec or CompressorSpec(**kw)
+
+    # ------------------------------------------------------------------ utils
+    def _abs_eb(self, x: np.ndarray) -> float:
+        if self.spec.eb_mode == "abs":
+            return float(self.spec.eb)
+        rng = float(np.max(x) - np.min(x)) if x.size else 0.0
+        return float(self.spec.eb) * rng
+
+    @staticmethod
+    def _spatial_view(x: np.ndarray):
+        """Fold >3-D arrays into (batch, spatial<=3)."""
+        nd = min(x.ndim, 3)
+        spatial = x.shape[x.ndim - nd :]
+        batch = int(np.prod(x.shape[: x.ndim - nd], dtype=np.int64)) if x.ndim > nd else 1
+        return x.reshape((batch,) + spatial), spatial
+
+    # -------------------------------------------------------------- compress
+    def compress(self, x: np.ndarray) -> bytes:
+        sp = self.spec
+        x = np.ascontiguousarray(x, np.float32)
+        eb_abs = self._abs_eb(x)
+        base_hdr = {
+            "shape": list(x.shape),
+            "predictor": sp.predictor,
+            "eb_abs": eb_abs,
+            "anchor_stride": sp.anchor_stride,
+        }
+        if eb_abs == 0.0:  # constant field (or degenerate): store verbatim min
+            return _sections_pack(dict(base_hdr, mode="const"), [np.float32(x.reshape(-1)[0] if x.size else 0).tobytes()])
+        if sp.predictor == "interp":
+            return self._compress_interp(x, eb_abs, base_hdr)
+        if sp.predictor == "lorenzo":
+            return self._compress_lorenzo(x, eb_abs, base_hdr)
+        if sp.predictor == "offset1d":
+            return self._compress_offset1d(x, eb_abs, base_hdr)
+        raise ValueError(sp.predictor)
+
+    def _compress_interp(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
+        sp = self.spec
+        xb, spatial = self._spatial_view(x)
+        ndim = len(spatial)
+        stride = sp.anchor_stride
+        twoeb = jnp.float32(2.0 * eb_abs)
+        padded = [blk.pad_field(xb[i], blk.ANCHOR_STRIDE) for i in range(xb.shape[0])]
+        padded_shapes = padded[0].shape
+        blocks = np.concatenate([blk.gather_blocks(p, blk.ANCHOR_STRIDE) for p in padded], axis=0)
+        nb_per = blocks.shape[0] // xb.shape[0]
+        if sp.autotune:
+            splines, schemes = autotune(blocks, 2.0 * eb_abs, sp.levels, stride)
+        else:
+            splines, schemes = tuple(sp.splines[: len(sp.levels)]), tuple(sp.schemes[: len(sp.levels)])
+        steps = build_steps(ndim, blk.BLOCK, sp.levels, splines, schemes)
+        codes_b, outl_b, _ = compress_blocks(jnp.asarray(blocks), twoeb, steps, stride)
+        codes_b, outl_b = np.asarray(codes_b), np.asarray(outl_b)
+        seqs, anchors, o_idx, o_val = [], [], [], []
+        psize = int(np.prod(padded_shapes))
+        for i in range(xb.shape[0]):
+            cgrid = blk.scatter_blocks(codes_b[i * nb_per : (i + 1) * nb_per], padded_shapes, blk.ANCHOR_STRIDE)
+            ogrid = blk.scatter_blocks(outl_b[i * nb_per : (i + 1) * nb_per], padded_shapes, blk.ANCHOR_STRIDE)
+            seqs.append(reorder_codes(cgrid, stride, sp.reorder))
+            anchors.append(blk.anchor_grid(padded[i], stride))
+            fi = np.flatnonzero(ogrid.reshape(-1))
+            o_idx.append(fi + i * psize)
+            o_val.append(padded[i].reshape(-1)[fi])
+        seq = np.concatenate(seqs)
+        payload = pipelines.encode(seq, sp.pipeline)
+        anc = np.concatenate([a.reshape(-1) for a in anchors]).astype(np.float32)
+        oi = np.concatenate(o_idx).astype(np.int64)
+        ov = np.concatenate(o_val).astype(np.float32)
+        header = dict(
+            base_hdr,
+            mode="interp",
+            padded=list(padded_shapes),
+            batch=int(xb.shape[0]),
+            splines=list(splines),
+            schemes=list(schemes),
+            reorder=bool(sp.reorder),
+            n_outliers=int(oi.size),
+        )
+        return _sections_pack(header, [payload, anc.tobytes(), oi.tobytes(), ov.tobytes()])
+
+    def _compress_lorenzo(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
+        sp = self.spec
+        xb, spatial = self._spatial_view(x)
+        twoeb = jnp.float32(2.0 * eb_abs)
+        codes, outl, cfull, _ = lor.lorenzo_encode(jnp.asarray(xb), twoeb, len(spatial))
+        codes, outl, cfull = np.asarray(codes), np.asarray(outl), np.asarray(cfull)
+        fi = np.flatnonzero(outl.reshape(-1))
+        payload = pipelines.encode(codes.reshape(-1), sp.pipeline)
+        header = dict(base_hdr, mode="lorenzo", batch=int(xb.shape[0]), spatial=list(spatial), n_outliers=int(fi.size))
+        return _sections_pack(header, [payload, fi.astype(np.int64).tobytes(), cfull.reshape(-1)[fi].astype(np.int32).tobytes()])
+
+    def _compress_offset1d(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
+        twoeb = jnp.float32(2.0 * eb_abs)
+        codes = np.asarray(lor.offset1d_encode(jnp.asarray(x), twoeb))
+        payload, hdr = fl_encode(codes)
+        header = dict(base_hdr, mode="offset1d", fl=hdr)
+        return _sections_pack(header, [payload])
+
+    # ------------------------------------------------------------ decompress
+    def decompress(self, buf: bytes) -> np.ndarray:
+        header, sections = _sections_unpack(buf)
+        shape = tuple(header["shape"])
+        mode = header["mode"]
+        if mode == "const":
+            v = np.frombuffer(sections[0], np.float32)[0]
+            return np.full(shape, v, np.float32)
+        if mode == "interp":
+            return self._decompress_interp(header, sections, shape)
+        if mode == "lorenzo":
+            return self._decompress_lorenzo(header, sections, shape)
+        if mode == "offset1d":
+            codes = fl_decode(sections[0], header["fl"])
+            out = np.asarray(lor.offset1d_decode(jnp.asarray(codes), jnp.float32(2.0 * header["eb_abs"])))
+            return out.reshape(shape)
+        raise ValueError(mode)
+
+    def _decompress_interp(self, header, sections, shape) -> np.ndarray:
+        stride = header["anchor_stride"]
+        padded_shapes = tuple(header["padded"])
+        batch = header["batch"]
+        ndim = len(padded_shapes)
+        eb_abs = header["eb_abs"]
+        seq = pipelines.decode(sections[0])
+        anc = np.frombuffer(sections[1], np.float32)
+        oi = np.frombuffer(sections[2], np.int64)
+        ov = np.frombuffer(sections[3], np.float32)
+        psize = int(np.prod(padded_shapes))
+        perm, _ = level_permutation(padded_shapes, stride)
+        npts = perm.size
+        anc_shape = tuple((d - 1) // stride + 1 for d in padded_shapes)
+        anc_per = int(np.prod(anc_shape))
+        steps = build_steps(ndim, blk.BLOCK, tuple(CompressorSpec(anchor_stride=stride).levels), tuple(header["splines"]), tuple(header["schemes"]))
+        outs = []
+        for i in range(batch):
+            cgrid = restore_codes(seq[i * npts : (i + 1) * npts], padded_shapes, fill=128, dtype=np.uint8,
+                                  stride=stride, reorder=header.get("reorder", True))
+            agrid = blk.place_anchors(padded_shapes, anc[i * anc_per : (i + 1) * anc_per].reshape(anc_shape), stride)
+            ovgrid = np.zeros(psize, np.float32)
+            sel = (oi >= i * psize) & (oi < (i + 1) * psize)
+            ovgrid[oi[sel] - i * psize] = ov[sel]
+            ovgrid = ovgrid.reshape(padded_shapes)
+            cb = blk.gather_blocks(cgrid, blk.ANCHOR_STRIDE)
+            ab = blk.gather_blocks(agrid, blk.ANCHOR_STRIDE)
+            vb = blk.gather_blocks(ovgrid, blk.ANCHOR_STRIDE)
+            recon_b = np.asarray(decompress_blocks(jnp.asarray(cb), jnp.asarray(ab), jnp.asarray(vb), jnp.float32(2.0 * eb_abs), steps, stride))
+            recon = blk.scatter_blocks(recon_b, padded_shapes, blk.ANCHOR_STRIDE)
+            outs.append(recon)
+        out = np.stack(outs)
+        nd = len(padded_shapes)
+        spatial = shape[len(shape) - nd :] if len(shape) >= nd else shape
+        sl = (slice(None),) + tuple(slice(0, s) for s in spatial)
+        out = out[sl]
+        return out.reshape(shape)
+
+    def _decompress_lorenzo(self, header, sections, shape) -> np.ndarray:
+        seq = pipelines.decode(sections[0])
+        oi = np.frombuffer(sections[1], np.int64)
+        ov = np.frombuffer(sections[2], np.int32)
+        batch, spatial = header["batch"], tuple(header["spatial"])
+        codes = seq.reshape((batch,) + spatial)
+        ofull = np.zeros(codes.size, np.int32)
+        ofull[oi] = ov
+        out = lor.lorenzo_decode(jnp.asarray(codes), jnp.asarray(ofull.reshape(codes.shape)), jnp.float32(2.0 * header["eb_abs"]), len(spatial))
+        return np.asarray(out).reshape(shape)
+
+
+# ------------------------------------------------------------------ presets
+def cusz_hi_cr(eb=1e-3, **kw) -> Compressor:
+    return Compressor(CompressorSpec(eb=eb, pipeline="cr", **kw))
+
+
+def cusz_hi_crz(eb=1e-3, **kw) -> Compressor:
+    """Beyond-paper mode: CR pipeline + open-source zstd tail stage."""
+    return Compressor(CompressorSpec(eb=eb, pipeline="crz", **kw))
+
+
+def cusz_hi_tp(eb=1e-3, **kw) -> Compressor:
+    return Compressor(CompressorSpec(eb=eb, pipeline="tp", **kw))
+
+
+def cusz_l(eb=1e-3) -> Compressor:
+    """cuSZ-L baseline: Lorenzo + Huffman."""
+    return Compressor(CompressorSpec(eb=eb, predictor="lorenzo", pipeline="hf"))
+
+
+def cusz_i(eb=1e-3) -> Compressor:
+    """cuSZ-I baseline: stride-8 anchors, 3 levels, 1D scheme, Huffman only."""
+    return Compressor(
+        CompressorSpec(eb=eb, predictor="interp", pipeline="hf", anchor_stride=8, autotune=False,
+                       splines=("cubic",) * 3, schemes=("1d",) * 3, reorder=False)
+    )
+
+
+def cuszp2_like(eb=1e-3) -> Compressor:
+    """cuSZp2-like baseline: 1-D offset prediction + fixed-length encoding."""
+    return Compressor(CompressorSpec(eb=eb, predictor="offset1d", pipeline="none"))
+
+
+def fzgpu_like(eb=1e-3) -> Compressor:
+    """FZ-GPU-like baseline: Lorenzo + bitshuffle + de-redundancy."""
+    return Compressor(CompressorSpec(eb=eb, predictor="lorenzo", pipeline="fz"))

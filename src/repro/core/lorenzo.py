@@ -1,0 +1,54 @@
+"""Lorenzo-extrapolation decomposition (the cuSZ-L baseline, §2.2/§6.1.2).
+
+Uses cuSZ's dual-quant trick: pre-quantize values to integers
+(pq = rint(x / 2eb), error <= eb), then take the exact integer Lorenzo
+difference along every axis. Decompression is an exact integer prefix-sum,
+so no reconstruction feedback loop is needed — fully parallel both ways.
+Large codes (|q| > 127) are outliers: the int32 code is stored on the side
+and the uint8 slot is the reserved value 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+RADIUS = 127
+CENTER = 128
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def lorenzo_encode(x: jnp.ndarray, twoeb: jnp.ndarray, ndim_spatial: int | None = None):
+    """x: float array. Returns (codes u8, outlier_mask, outlier_int32, recon)."""
+    nd = x.ndim if ndim_spatial is None else ndim_spatial
+    pq = jnp.rint(x / twoeb).astype(jnp.int32)
+    c = pq
+    for ax in range(x.ndim - nd, x.ndim):
+        c = jnp.diff(c, axis=ax, prepend=0)
+    outl = jnp.abs(c) > RADIUS
+    codes = jnp.where(outl, 0, jnp.clip(c, -RADIUS, RADIUS) + CENTER).astype(jnp.uint8)
+    recon = pq.astype(jnp.float32) * twoeb
+    return codes, outl, c, recon
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def lorenzo_decode(codes: jnp.ndarray, outlier_full: jnp.ndarray, twoeb: jnp.ndarray, ndim_spatial: int | None = None):
+    """codes u8 + dense int32 outlier array (0 elsewhere) -> recon floats."""
+    nd = codes.ndim if ndim_spatial is None else ndim_spatial
+    q = jnp.where(codes == 0, outlier_full, codes.astype(jnp.int32) - CENTER)
+    for ax in range(codes.ndim - nd, codes.ndim):
+        q = jnp.cumsum(q, axis=ax)
+    return q.astype(jnp.float32) * twoeb
+
+
+@jax.jit
+def offset1d_encode(x: jnp.ndarray, twoeb: jnp.ndarray):
+    """cuSZp2-style 1-D offset prediction on the flattened stream."""
+    pq = jnp.rint(x.reshape(-1) / twoeb).astype(jnp.int32)
+    return jnp.diff(pq, prepend=0)
+
+
+@jax.jit
+def offset1d_decode(codes: jnp.ndarray, twoeb: jnp.ndarray):
+    return jnp.cumsum(codes).astype(jnp.float32) * twoeb

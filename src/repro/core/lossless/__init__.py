@@ -1,0 +1,1 @@
+from .pipelines import PIPELINES, decode, encode  # noqa: F401

@@ -1,0 +1,36 @@
+"""BIT1: bit-plane shuffle (§5.2.3).
+
+Within each block, output plane p holds bit p of every byte — after TCMS,
+high planes are near-constant runs that RRE1 collapses. The transpose is a
+pure data-movement op; repro.kernels.bitshuffle carries the Pallas/TPU
+version, this is the host/numpy path used in the pipelines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+BLOCK = 8192
+
+
+def bitshuffle_encode(data: np.ndarray, block: int = BLOCK):
+    data = np.ascontiguousarray(data, np.uint8)
+    n = data.size
+    if n == 0:
+        return b"", {"n": 0, "block": int(block)}
+    pad = (-n) % block
+    if pad:
+        data = np.concatenate([data, np.zeros(pad, np.uint8)])
+    arr = data.reshape(-1, block)
+    bits = np.unpackbits(arr, axis=1).reshape(-1, block, 8)
+    planes = np.packbits(bits.transpose(0, 2, 1).reshape(arr.shape[0], -1), axis=1)
+    return planes.reshape(-1).tobytes(), {"n": int(n), "block": int(block)}
+
+
+def bitshuffle_decode(payload: bytes, header: dict) -> np.ndarray:
+    n, block = header["n"], header["block"]
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    arr = np.frombuffer(payload, np.uint8).reshape(-1, block)
+    bits = np.unpackbits(arr, axis=1).reshape(-1, 8, block)
+    out = np.packbits(bits.transpose(0, 2, 1).reshape(arr.shape[0], -1), axis=1)
+    return out.reshape(-1)[:n].copy()

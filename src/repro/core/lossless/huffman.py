@@ -1,0 +1,175 @@
+"""Canonical Huffman coding over uint8 symbols (the HF stage, §5.2).
+
+GPU/TPU mapping (DESIGN.md §3): the histogram and per-symbol code lookup are
+device-vectorized (see repro.kernels.histogram); the 256-leaf tree build is
+O(256 log 256) scalar work and runs host-side. The bitstream is chunked
+(4096 symbols, byte-aligned per chunk) exactly like cuSZ's coarse-grained
+layout so decode parallelizes across chunks — our decoder is vectorized
+across chunks with numpy.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+CHUNK = 4096
+MAXLEN = 24  # refuse longer codes (rebalance by flooring tiny freqs)
+
+
+def code_lengths(hist: np.ndarray) -> np.ndarray:
+    """Huffman code length per symbol (0 for absent symbols)."""
+    sym = np.flatnonzero(hist)
+    if sym.size == 0:
+        return np.zeros(256, np.uint8)
+    if sym.size == 1:
+        out = np.zeros(256, np.uint8)
+        out[sym[0]] = 1
+        return out
+    heap = [(int(hist[s]), int(s), (int(s),)) for s in sym]
+    heapq.heapify(heap)
+    tick = 256
+    depth = {int(s): 0 for s in sym}
+    while len(heap) > 1:
+        fa, _, la = heapq.heappop(heap)
+        fb, _, lb = heapq.heappop(heap)
+        for s in la + lb:
+            depth[s] += 1
+        heapq.heappush(heap, (fa + fb, tick, la + lb))
+        tick += 1
+    out = np.zeros(256, np.uint8)
+    for s, d in depth.items():
+        out[s] = d
+    if out.max() > MAXLEN:  # pathological skew: flatten tail lengths
+        out = np.minimum(out, MAXLEN)
+        out = _fix_kraft(out)
+    return out
+
+
+def _fix_kraft(lens: np.ndarray) -> np.ndarray:
+    """Length-limited repair: increase short codes until Kraft sum <= 1."""
+    lens = lens.astype(np.int64).copy()
+    used = lens > 0
+    while np.sum(np.where(used, 2.0 ** (-lens.astype(float)), 0.0)) > 1.0 + 1e-12:
+        i = np.argmin(np.where(used & (lens < MAXLEN), lens, 1 << 30))
+        lens[i] += 1
+    return lens.astype(np.uint8)
+
+
+def canonical_codes(lens: np.ndarray):
+    """MSB-first canonical codewords: (codes u32, lens, first_code[l], sym_table, offsets[l])."""
+    order = np.lexsort((np.arange(256), lens.astype(np.int64)))
+    order = order[lens[order] > 0]
+    codes = np.zeros(256, np.uint32)
+    first_code = np.zeros(MAXLEN + 2, np.uint32)
+    counts = np.bincount(lens[lens > 0].astype(np.int64), minlength=MAXLEN + 2)
+    c = 0
+    firsts = {}
+    for l in range(1, MAXLEN + 1):
+        firsts[l] = c
+        first_code[l] = c
+        c = (c + int(counts[l])) << 1
+    nxt = {l: int(first_code[l]) for l in range(1, MAXLEN + 1)}
+    for s in order:
+        l = int(lens[s])
+        codes[s] = nxt[l]
+        nxt[l] += 1
+    sym_table = order.astype(np.uint8)  # symbols sorted by (len, sym) == canonical order
+    offsets = np.zeros(MAXLEN + 2, np.int64)
+    offsets[1:] = np.cumsum(counts)[:-1][: MAXLEN + 1]
+    return codes, lens, first_code, sym_table, offsets, counts
+
+
+def encode(data: np.ndarray):
+    """data: uint8 array. Returns (payload bytes, header dict)."""
+    data = np.ascontiguousarray(data, dtype=np.uint8)
+    n = data.size
+    hist = np.bincount(data, minlength=256)
+    lens = code_lengths(hist)
+    codes, lens, *_ = canonical_codes(lens)
+    sym_lens = lens[data].astype(np.int64)
+    nchunks = max(1, -(-n // CHUNK))
+    # per-chunk bit counts -> byte-aligned chunk layout
+    pad_n = nchunks * CHUNK
+    sl = np.zeros(pad_n, np.int64)
+    sl[:n] = sym_lens
+    chunk_bits = sl.reshape(nchunks, CHUNK).sum(1)
+    chunk_bytes = (chunk_bits + 7) >> 3
+    chunk_byte_off = np.zeros(nchunks + 1, np.int64)
+    np.cumsum(chunk_bytes, out=chunk_byte_off[1:])
+    total_bytes = int(chunk_byte_off[-1])
+    out_bits = np.zeros(total_bytes * 8, np.uint8)
+    # global bit position per symbol
+    within = sl.reshape(nchunks, CHUNK)
+    start_in_chunk = np.cumsum(within, 1) - within
+    bitpos = (chunk_byte_off[:-1, None] * 8 + start_in_chunk).reshape(-1)[:n]
+    # scatter codeword bits (slabbed to bound memory)
+    cw = codes[data].astype(np.int64)
+    SLAB = 1 << 22
+    for lo in range(0, n, SLAB):
+        hi = min(n, lo + SLAB)
+        L = sym_lens[lo:hi]
+        reps = np.repeat(np.arange(lo, hi), L)
+        j = np.arange(int(L.sum())) - np.repeat(np.cumsum(L) - L, L)
+        out_bits[bitpos[reps] + j] = (cw[reps] >> (sym_lens[reps] - 1 - j)) & 1
+    payload = np.packbits(out_bits).tobytes()
+    header = {
+        "n": int(n),
+        "lens": lens.tobytes().hex(),
+        "chunk_bytes": np.asarray(chunk_bytes, np.uint32).tobytes().hex(),
+    }
+    return payload, header
+
+
+def decode(payload: bytes, header: dict) -> np.ndarray:
+    n = int(header["n"])
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    lens = np.frombuffer(bytes.fromhex(header["lens"]), np.uint8).copy()
+    chunk_bytes = np.frombuffer(bytes.fromhex(header["chunk_bytes"]), np.uint32).astype(np.int64)
+    codes, lens, first_code, sym_table, offsets, counts = canonical_codes(lens)
+    maxlen = int(lens.max())
+    nchunks = chunk_bytes.size
+    byte_off = np.zeros(nchunks + 1, np.int64)
+    np.cumsum(chunk_bytes, out=byte_off[1:])
+    buf = np.frombuffer(payload, np.uint8)
+    buf = np.concatenate([buf, np.zeros(8, np.uint8)])  # slack for peeking past end
+    # canonical decode, vectorized across chunks
+    W = 32
+    # limit[l] = (first_code[l] + count[l]) << (W-l); monotone over l including
+    # unused lengths (the canonical recurrence keeps gaps consistent), so
+    # code length = first l with peek < limit[l].
+    limits = np.zeros(MAXLEN + 1, np.uint64)
+    for l in range(1, MAXLEN + 1):
+        limits[l] = np.uint64(int(first_code[l]) + int(counts[l])) << np.uint64(W - l)
+    limits_v = limits[1 : maxlen + 1]
+    cursors = byte_off[:-1] * 8  # bit cursor per chunk
+    counts_sym = np.full(nchunks, CHUNK, np.int64)
+    counts_sym[-1] = n - CHUNK * (nchunks - 1)
+    out = np.zeros(nchunks * CHUNK, np.uint8)
+    first_code64 = first_code.astype(np.int64)
+    offsets64 = offsets
+    for t in range(int(counts_sym.max())):
+        act = counts_sym > t
+        cur = cursors[act]
+        byte = cur >> 3
+        shift = cur & 7
+        # gather 5 bytes -> 32-bit MSB-aligned peek window
+        window = np.zeros(cur.size, np.uint64)
+        for b in range(5):
+            window = (window << np.uint64(8)) | buf[byte + b].astype(np.uint64)
+        peek = (window >> (np.uint64(8) - shift.astype(np.uint64))) & np.uint64(0xFFFFFFFF)
+        ls = 1 + np.argmax(peek[:, None] < limits_v[None, :], axis=1)
+        cw = (peek >> (np.uint64(W) - ls.astype(np.uint64))).astype(np.int64)
+        sym = sym_table[offsets64[ls] + cw - first_code64[ls]]
+        out[np.flatnonzero(act) * CHUNK + t] = sym
+        cursors[act] = cur + ls
+    return _gather_out(out, counts_sym)
+
+
+def _gather_out(out: np.ndarray, counts_sym: np.ndarray) -> np.ndarray:
+    nchunks = counts_sym.size
+    if counts_sym[-1] == CHUNK:
+        return out
+    keep = out.reshape(nchunks, CHUNK)
+    return np.concatenate([keep[:-1].reshape(-1), keep[-1, : counts_sym[-1]]])

@@ -1,0 +1,94 @@
+"""Composable lossless pipelines (paper §5.2, Figure 7).
+
+A pipeline is a list of stage names; each stage maps a byte stream to
+(payload, header) and back. The two cuSZ-Hi pipelines:
+
+    CR mode:  hf  -> rre4 -> tcms8 -> rze1      (ratio-preferred)
+    TP mode:  tcms1 -> bit1 -> rre1             (throughput-preferred)
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from . import bitshuffle as _bit
+from . import huffman as _hf
+from . import rre as _rre
+from . import tcms as _tcms
+
+PIPELINES = {
+    "cr": ("hf", "rre4", "tcms8", "rze1"),
+    "tp": ("tcms1", "bit1", "rre1"),
+    "hf": ("hf",),
+    "none": (),
+    # baseline pipelines (see repro.core.baselines)
+    "fz": ("bit1", "rre1"),
+    # beyond-paper: CR pipeline with an open-source zstd tail (replaces the
+    # role Bitcomp plays for cuSZ-IB, without the proprietary dependency)
+    "crz": ("hf", "rre4", "tcms8", "rze1", "zstd"),
+}
+
+
+def _encode_stage(name: str, data: np.ndarray):
+    if name == "hf":
+        return _hf.encode(data)
+    if name.startswith("rre"):
+        return _rre.rre_encode(data, int(name[3:]))
+    if name.startswith("rze"):
+        return _rre.rze_encode(data, int(name[3:]))
+    if name.startswith("tcms"):
+        return _tcms.tcms_encode(data, int(name[4:]))
+    if name == "bit1":
+        return _bit.bitshuffle_encode(data)
+    if name == "zstd":
+        import zstandard
+
+        return zstandard.ZstdCompressor(level=6).compress(data.tobytes()), {}
+    raise ValueError(f"unknown stage {name!r}")
+
+
+def _decode_stage(name: str, payload: bytes, header: dict) -> np.ndarray:
+    if name == "hf":
+        return _hf.decode(payload, header)
+    if name.startswith("rre"):
+        return _rre.rre_decode(payload, header)
+    if name.startswith("rze"):
+        return _rre.rze_decode(payload, header)
+    if name.startswith("tcms"):
+        return _tcms.tcms_decode(payload, header)
+    if name == "bit1":
+        return _bit.bitshuffle_decode(payload, header)
+    if name == "zstd":
+        import zstandard
+
+        return np.frombuffer(zstandard.ZstdDecompressor().decompress(payload), np.uint8)
+    raise ValueError(f"unknown stage {name!r}")
+
+
+def encode(data: np.ndarray, pipeline: str | tuple) -> bytes:
+    stages = PIPELINES[pipeline] if isinstance(pipeline, str) else tuple(pipeline)
+    cur = np.ascontiguousarray(data, np.uint8)
+    headers = []
+    for name in stages:
+        payload, hdr = _encode_stage(name, cur)
+        nxt = np.frombuffer(payload, np.uint8) if isinstance(payload, bytes) else payload
+        if nxt.size + len(json.dumps(hdr)) >= cur.size and cur.size > 0:
+            headers.append({"_skip": True})  # stage expands: store-through
+            continue
+        headers.append(hdr)
+        cur = nxt
+    meta = json.dumps({"stages": list(stages), "headers": headers}).encode()
+    return len(meta).to_bytes(4, "little") + meta + cur.tobytes()
+
+
+def decode(buf: bytes) -> np.ndarray:
+    mlen = int.from_bytes(buf[:4], "little")
+    meta = json.loads(buf[4 : 4 + mlen])
+    cur = buf[4 + mlen :]
+    for name, hdr in zip(reversed(meta["stages"]), reversed(meta["headers"])):
+        if hdr.get("_skip"):
+            continue
+        cur = _decode_stage(name, cur, hdr)
+        cur = cur.tobytes() if isinstance(cur, np.ndarray) else cur
+    return np.frombuffer(cur, np.uint8)

@@ -1,0 +1,29 @@
+"""Compression quality metrics (paper §6.1.4)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def value_range(x: np.ndarray) -> float:
+    return float(np.max(x) - np.min(x))
+
+
+def max_abs_err(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.max(np.abs(a.astype(np.float64) - b.astype(np.float64)))) if a.size else 0.0
+
+
+def psnr(orig: np.ndarray, recon: np.ndarray) -> float:
+    rng = value_range(orig)
+    mse = float(np.mean((orig.astype(np.float64) - recon.astype(np.float64)) ** 2))
+    if mse == 0.0:
+        return float("inf")
+    return 20.0 * np.log10(rng) - 10.0 * np.log10(mse) if rng > 0 else float("-inf")
+
+
+def compression_ratio(orig: np.ndarray, compressed: bytes) -> float:
+    return orig.nbytes / max(1, len(compressed))
+
+
+def bit_rate(orig: np.ndarray, compressed: bytes) -> float:
+    """bits per element (32/CR for fp32)."""
+    return 8.0 * len(compressed) / orig.size

@@ -1,0 +1,97 @@
+"""Interpolation-based lossy decomposition (paper §5.1) — pure-JAX engine.
+
+Runs the 4-level hierarchical spline prediction over a batch of closed
+17^ndim blocks (block axis vectorized), quantizes prediction errors to
+uint8 codes (radius 127, code 0 reserved for outliers, paper §5.2.1) and
+maintains the reconstruction in lock-step so compression and decompression
+replay bit-identical arithmetic.
+
+The per-step math is the matmul formulation from stencils.py; the Pallas
+kernel in repro.kernels.interp3d implements the same steps with the block
+axis as the TPU lane axis. This module is the reference/runtime engine used
+by the host compressor (and the oracle the kernel is tested against).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .stencils import Step, build_steps
+
+RADIUS = 127
+CENTER = 128  # uint8 code = q + 128; 0 marks an outlier
+
+
+def _apply_mat(recon: jnp.ndarray, M: np.ndarray, axis: int) -> jnp.ndarray:
+    """Apply (B,B) operator along spatial `axis` of (nb, B, ..., B)."""
+    x = jnp.moveaxis(recon, axis + 1, 0)  # (B, nb, ...)
+    y = jnp.tensordot(jnp.asarray(M), x, axes=((1,), (0,)))
+    return jnp.moveaxis(y, 0, axis + 1)
+
+
+def _predict(recon: jnp.ndarray, step: Step) -> jnp.ndarray:
+    pred = jnp.zeros_like(recon)
+    for d, M, w in zip(step.dims, step.matrices, step.weights):
+        pred = pred + jnp.asarray(w) * _apply_mat(recon, M, d)
+    return pred
+
+
+def _anchor_mask(spatial: tuple[int, ...], anchor_every: int) -> np.ndarray:
+    m = np.zeros(spatial, bool)
+    sl = tuple(slice(None, None, anchor_every) for _ in spatial)
+    m[sl] = True
+    return m
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def compress_blocks(blocks: jnp.ndarray, twoeb: jnp.ndarray, steps: tuple[Step, ...], anchor_every: int = 16):
+    """blocks: (nb, B..) f32 with anchors in place.
+
+    Returns (codes u8 (nb,B..), outlier_mask bool, recon f32).
+    recon == what the decompressor reproduces (outliers patched exactly).
+    """
+    orig = blocks
+    # start from anchors only; non-anchor entries are dead until predicted
+    anchor_mask = _anchor_mask(blocks.shape[1:], anchor_every)
+    recon = jnp.where(jnp.asarray(anchor_mask), orig, 0.0)
+    codes = jnp.full(blocks.shape, CENTER, jnp.int32)
+    outl_all = jnp.zeros(blocks.shape, bool)
+    inv2eb = 1.0 / twoeb
+    for step in steps:
+        pred = _predict(recon, step)
+        q = jnp.rint((orig - pred) * inv2eb)
+        outl = jnp.abs(q) > RADIUS
+        rec = jnp.where(outl, orig, pred + q * twoeb)
+        m = jnp.asarray(step.mask)
+        recon = jnp.where(m, rec, recon)
+        qi = jnp.clip(q, -RADIUS - 1, RADIUS + 1).astype(jnp.int32)  # safe cast; outliers masked below
+        codes = jnp.where(m, jnp.where(outl, 0, qi + CENTER), codes)
+        outl_all = outl_all | (m & outl)
+    return codes.astype(jnp.uint8), outl_all, recon
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def decompress_blocks(
+    codes: jnp.ndarray,      # (nb, B..) u8, anchors position value irrelevant
+    anchors: jnp.ndarray,    # (nb, B..) f32, valid only at anchor positions
+    outlier_vals: jnp.ndarray,  # (nb, B..) f32, valid only where code == 0
+    twoeb: jnp.ndarray,
+    steps: tuple[Step, ...],
+    anchor_every: int = 16,
+) -> jnp.ndarray:
+    anchor_mask = _anchor_mask(codes.shape[1:], anchor_every)
+    recon = jnp.where(jnp.asarray(anchor_mask), anchors, 0.0)
+    q = codes.astype(jnp.int32) - CENTER
+    is_outl = codes == 0
+    for step in steps:
+        pred = _predict(recon, step)
+        rec = jnp.where(is_outl, outlier_vals, pred + q.astype(jnp.float32) * twoeb)
+        recon = jnp.where(jnp.asarray(step.mask), rec, recon)
+    return recon
+
+
+def default_steps(ndim: int, splines=("cubic",) * 4, schemes=("md",) * 4, levels=(8, 4, 2, 1), B: int = 17):
+    return build_steps(ndim, B, tuple(levels), tuple(splines), tuple(schemes))

@@ -1,0 +1,64 @@
+"""Mapping-based quantization-code reordering (paper §5.1.4, Eq. 3).
+
+Codes are emitted grouped by interpolation level — largest strides first —
+row-major within each level. This is the same bijection as the paper's
+closed-form index I(x,y,z); we materialize it once per field shape (cached)
+and apply it as a gather. Anchor positions (every coord divisible by 16)
+carry no quantization code and are excluded (they are stored losslessly).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+ANCHOR_STRIDE = 16
+
+
+@functools.lru_cache(maxsize=64)
+def _level_of_shape(shape: tuple[int, ...], stride: int) -> np.ndarray:
+    """Per-point hierarchy level: max l<=log2(stride) with 2^l | every coord."""
+    lmax = int(np.log2(stride))
+    lev = None
+    for d in shape:
+        c = np.arange(d)
+        ld = np.full(d, 0, np.int8)
+        for l in range(1, lmax + 1):
+            ld[c % (1 << l) == 0] = l
+        lev_d = ld
+        lev = lev_d if lev is None else np.minimum(lev[..., None], lev_d)
+    return lev  # shape `shape`, values 0..lmax
+
+
+@functools.lru_cache(maxsize=64)
+def level_permutation(shape: tuple[int, ...], stride: int = ANCHOR_STRIDE):
+    """(perm, inv): perm[j] = flat index (row-major, in `shape`) of the j-th
+    code in the reordered sequence; inv undoes it. Anchors excluded."""
+    lev = _level_of_shape(shape, stride).reshape(-1)
+    lmax = int(np.log2(stride))
+    parts = [np.flatnonzero(lev == l) for l in range(lmax - 1, -1, -1)]  # big strides first
+    perm = np.concatenate(parts).astype(np.int64)
+    # inverse: pos[flat index] = position within the reordered sequence (-1 for anchors)
+    pos = np.empty(int(np.prod(shape)), np.int64)
+    pos.fill(-1)
+    pos[perm] = np.arange(perm.size)
+    return perm, pos
+
+
+@functools.lru_cache(maxsize=64)
+def flat_permutation(shape: tuple[int, ...], stride: int = ANCHOR_STRIDE):
+    """Non-anchor indices in plain row-major order (the no-reorder ablation)."""
+    perm, _ = level_permutation(shape, stride)
+    return np.sort(perm)
+
+
+def reorder_codes(codes_grid: np.ndarray, stride: int = ANCHOR_STRIDE, reorder: bool = True) -> np.ndarray:
+    perm = level_permutation(codes_grid.shape, stride)[0] if reorder else flat_permutation(codes_grid.shape, stride)
+    return codes_grid.reshape(-1)[perm]
+
+
+def restore_codes(seq: np.ndarray, shape: tuple[int, ...], fill, dtype, stride: int = ANCHOR_STRIDE, reorder: bool = True) -> np.ndarray:
+    perm = level_permutation(shape, stride)[0] if reorder else flat_permutation(shape, stride)
+    out = np.full(int(np.prod(shape)), fill, dtype=dtype)
+    out[perm] = seq
+    return out.reshape(shape)

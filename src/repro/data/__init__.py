@@ -1,0 +1,2 @@
+from .fields import DATASETS, get_field, load_or_generate  # noqa: F401
+from .synthetic import Prefetcher, TokenPipeline  # noqa: F401

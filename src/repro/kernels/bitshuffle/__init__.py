@@ -1,0 +1,2 @@
+from .ops import bitshuffle_pallas  # noqa: F401
+from .ref import bitshuffle_ref  # noqa: F401

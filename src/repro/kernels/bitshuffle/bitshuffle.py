@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: BIT1 bit-plane shuffle (paper §5.2.3).
+
+Per 1024-byte block, output plane p holds bit p of every byte. Bits are
+extracted with shifts/masks on int32 lanes and re-packed with a (8,)
+weight contraction — no byte-addressed scatter, so it maps onto the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK = 1024     # bytes per shuffle block
+TILE_BLOCKS = 8  # blocks per grid step
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.int32)  # (T, BLOCK)
+    T = x.shape[0]
+    # bit p of each byte, MSB first: (T, 8, BLOCK)
+    planes = jnp.stack([(x >> (7 - p)) & 1 for p in range(8)], axis=1)
+    # pack each plane's BLOCK bits into BLOCK/8 bytes; weights 2^(7-b) built
+    # from iota (Pallas kernels cannot capture array constants)
+    w = jnp.left_shift(jnp.int32(1), 7 - jax.lax.iota(jnp.int32, 8))
+    g = planes.reshape(T, 8, BLOCK // 8, 8)
+    packed = jnp.einsum("tpgb,b->tpg", g, w, preferred_element_type=jnp.int32)
+    o_ref[...] = packed.reshape(T, BLOCK).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def bitshuffle_pallas_raw(x: jnp.ndarray, interpret: bool = True):
+    """x: (nblocks, BLOCK) u8 with nblocks % TILE_BLOCKS == 0."""
+    n = x.shape[0]
+    spec = pl.BlockSpec((TILE_BLOCKS, BLOCK), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // TILE_BLOCKS,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,18 @@
+"""Wrapper: arbitrary byte stream -> bit-plane shuffled stream (Pallas)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bitshuffle import BLOCK, TILE_BLOCKS, bitshuffle_pallas_raw
+
+
+def bitshuffle_pallas(data: np.ndarray, interpret: bool = True) -> np.ndarray:
+    data = np.ascontiguousarray(data, np.uint8)
+    n = data.size
+    pad = (-n) % (BLOCK * TILE_BLOCKS)
+    if pad:
+        data = np.concatenate([data, np.zeros(pad, np.uint8)])
+    arr = jnp.asarray(data.reshape(-1, BLOCK))
+    out = np.asarray(bitshuffle_pallas_raw(arr, interpret)).reshape(-1)
+    return out  # caller keeps n for unpadding on decode

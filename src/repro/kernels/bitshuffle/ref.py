@@ -1,0 +1,17 @@
+"""Pure-numpy oracle for the bitshuffle kernel (same 1024-byte block size)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .bitshuffle import BLOCK, TILE_BLOCKS
+
+
+def bitshuffle_ref(data: np.ndarray) -> np.ndarray:
+    data = np.ascontiguousarray(data, np.uint8)
+    n = data.size
+    pad = (-n) % (BLOCK * TILE_BLOCKS)
+    if pad:
+        data = np.concatenate([data, np.zeros(pad, np.uint8)])
+    arr = data.reshape(-1, BLOCK)
+    bits = np.unpackbits(arr, axis=1).reshape(-1, BLOCK, 8)
+    return np.packbits(bits.transpose(0, 2, 1).reshape(arr.shape[0], -1), axis=1).reshape(-1)

@@ -1,0 +1,2 @@
+from .ops import histogram256_pallas  # noqa: F401
+from .ref import histogram256_ref  # noqa: F401

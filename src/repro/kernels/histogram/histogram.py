@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: 256-bin histogram of uint8 symbols (HF stage input).
+
+One-hot contraction per tile, accumulated across grid steps — the TPU
+equivalent of cuSZ's shared-memory privatized histogram: lanes compare
+against a broadcast iota, a reduction over the tile axis yields per-bin
+counts, and the sequential grid accumulates into the output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 8192  # symbols per grid step; one-hot tile = 8192x256 i32 < 8 MiB VMEM
+
+
+def _kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # (TILE,)
+    onehot = (x[:, None] == jnp.arange(256, dtype=jnp.int32)[None, :]).astype(jnp.int32)
+    o_ref[...] += onehot.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def histogram256_raw(x: jnp.ndarray, interpret: bool = True):
+    """x: (n,) u8 with n % TILE == 0 -> (256,) i32 counts."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((256,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((256,), jnp.int32),
+        interpret=interpret,
+    )(x)

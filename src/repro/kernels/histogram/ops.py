@@ -1,0 +1,19 @@
+"""Wrapper: uint8 stream -> 256-bin histogram via the Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .histogram import TILE, histogram256_raw
+
+
+def histogram256_pallas(data: np.ndarray, interpret: bool = True) -> np.ndarray:
+    data = np.ascontiguousarray(data, np.uint8).reshape(-1)
+    n = data.size
+    pad = (-n) % TILE
+    if pad:
+        data = np.concatenate([data, np.zeros(pad, np.uint8)])
+    hist = np.array(histogram256_raw(jnp.asarray(data), interpret))
+    if pad:
+        hist[0] -= pad  # padding contributed zeros
+    return hist

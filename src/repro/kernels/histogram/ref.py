@@ -1,0 +1,8 @@
+"""Pure-numpy oracle for histogram256."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def histogram256_ref(data: np.ndarray) -> np.ndarray:
+    return np.bincount(np.ascontiguousarray(data, np.uint8).reshape(-1), minlength=256).astype(np.int32)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused interpolation-predict + quantize (paper §5.1).
+
+TPU adaptation of cuSZ-Hi's thread-block-per-17^3-chunk CUDA kernel
+(DESIGN.md §3): the data-block axis becomes the vector *lane* axis. Each
+grid step stages a (17,17,17,LANES) VMEM tile — LANES independent blocks —
+and sweeps the 4-level hierarchy. Every 1-D spline interpolation is a
+static (17,17) banded-matrix contraction (MXU work), and level masks /
+blend weights are small VMEM-resident constant tensors (Pallas forbids
+captured array constants, so they ride in as extra inputs), making the
+kernel branch-free.
+
+VMEM budget per grid step (LANES=128, fp32): in 2.5 MiB + recon 2.5 MiB +
+codes/outl 2.5+0.6 MiB + step tables ~0.6 MiB + transients < 16 MiB v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.predictor import CENTER, RADIUS, _anchor_mask
+from repro.core.stencils import Step
+
+LANES = 128
+
+
+@functools.lru_cache(maxsize=None)
+def pack_steps(steps: tuple[Step, ...], anchor_every: int):
+    """Stack step tables into dense arrays + static dispatch metadata.
+
+    Returns (mats (n_ops,B,B) f32, wts (n_ops,B..) f32, masks (n_steps+1,B..) u8,
+    meta) where meta[k] = ((dim, op_idx), ...) for step k; masks[0] = anchors.
+    """
+    B = steps[0].mask.shape[0]
+    ndim = steps[0].mask.ndim
+    mats, wts, masks, meta = [], [], [_anchor_mask((B,) * ndim, anchor_every).astype(np.uint8)], []
+    for st in steps:
+        ops = []
+        for d, M, w in zip(st.dims, st.matrices, st.weights):
+            ops.append((d, len(mats)))
+            mats.append(M.astype(np.float32))
+            wts.append(w.astype(np.float32))
+        masks.append(st.mask.astype(np.uint8))
+        meta.append(tuple(ops))
+    return (
+        np.stack(mats),
+        np.stack(wts),
+        np.stack(masks),
+        tuple(meta),
+    )
+
+
+def _einsum_axis(M: jnp.ndarray, x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    eq = {0: "im,mjkl->ijkl", 1: "jm,imkl->ijkl", 2: "km,ijml->ijkl"}[axis]
+    return jnp.einsum(eq, M, x, preferred_element_type=jnp.float32)
+
+
+def _kernel(blocks_ref, twoeb_ref, mats_ref, wts_ref, masks_ref, codes_ref, outl_ref, recon_ref, *, meta):
+    orig = blocks_ref[...]  # (B,B,B,L) f32
+    twoeb = twoeb_ref[0]
+    inv2eb = 1.0 / twoeb
+    am = masks_ref[0][..., None] != 0
+    recon = jnp.where(am, orig, 0.0)
+    codes = jnp.full(orig.shape, CENTER, jnp.int32)
+    outl = jnp.zeros(orig.shape, jnp.bool_)
+    for k, ops in enumerate(meta):
+        pred = jnp.zeros_like(recon)
+        for d, oi in ops:
+            pred = pred + wts_ref[oi][..., None] * _einsum_axis(mats_ref[oi], recon, d)
+        q = jnp.rint((orig - pred) * inv2eb)
+        is_out = jnp.abs(q) > RADIUS
+        rec = jnp.where(is_out, orig, pred + q * twoeb)
+        m = masks_ref[k + 1][..., None] != 0
+        recon = jnp.where(m, rec, recon)
+        qi = jnp.clip(q, -RADIUS - 1, RADIUS + 1).astype(jnp.int32)
+        codes = jnp.where(m, jnp.where(is_out, 0, qi + CENTER), codes)
+        outl = outl | (m & is_out)
+    codes_ref[...] = codes.astype(jnp.uint8)
+    outl_ref[...] = outl.astype(jnp.uint8)
+    recon_ref[...] = recon
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def interp3d_compress(blocks_t: jnp.ndarray, twoeb: jnp.ndarray, steps: tuple[Step, ...], anchor_every: int = 16, interpret: bool = True):
+    """blocks_t: (B,B,B, nb_padded) with nb_padded % LANES == 0.
+
+    Returns (codes u8, outlier u8, recon f32), same layout.
+    """
+    B = blocks_t.shape[0]
+    nb = blocks_t.shape[-1]
+    assert nb % LANES == 0, "pad the block axis to a LANES multiple"
+    mats, wts, masks, meta = pack_steps(steps, anchor_every)
+    grid = (nb // LANES,)
+    spec = pl.BlockSpec((B, B, B, LANES), lambda i: (0, 0, 0, i))
+    fixed = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out_shapes = (
+        jax.ShapeDtypeStruct(blocks_t.shape, jnp.uint8),
+        jax.ShapeDtypeStruct(blocks_t.shape, jnp.uint8),
+        jax.ShapeDtypeStruct(blocks_t.shape, jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, meta=meta),
+        grid=grid,
+        in_specs=[spec, fixed((1,)), fixed(mats.shape), fixed(wts.shape), fixed(masks.shape)],
+        out_specs=(spec, spec, spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(blocks_t, twoeb.reshape(1), jnp.asarray(mats), jnp.asarray(wts), jnp.asarray(masks))

@@ -1,0 +1,22 @@
+"""Jitted host-facing wrapper for the interp3d Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .interp3d import LANES, interp3d_compress
+
+
+def compress_blocks_pallas(blocks: np.ndarray, twoeb: float, steps, anchor_every: int = 16, interpret: bool = True):
+    """Drop-in for repro.core.predictor.compress_blocks, routed through Pallas.
+
+    blocks: (nb, B, B, B) f32 -> (codes u8, outlier bool, recon f32), (nb, B, B, B).
+    """
+    nb = blocks.shape[0]
+    pad = (-nb) % LANES
+    if pad:
+        blocks = np.concatenate([blocks, np.zeros((pad,) + blocks.shape[1:], blocks.dtype)], 0)
+    bt = jnp.asarray(np.moveaxis(blocks, 0, -1))  # (B,B,B,nb')
+    codes, outl, recon = interp3d_compress(bt, jnp.float32(twoeb), steps, anchor_every, interpret)
+    mv = lambda a: np.moveaxis(np.asarray(a), -1, 0)[:nb]
+    return mv(codes), mv(outl).astype(bool), mv(recon)

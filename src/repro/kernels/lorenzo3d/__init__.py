@@ -1,0 +1,2 @@
+from .ops import lorenzo_encode_pallas  # noqa: F401
+from .ref import lorenzo_encode_ref  # noqa: F401

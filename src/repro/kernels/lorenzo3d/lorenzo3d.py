@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: 3-D Lorenzo delta + quantize (cuSZ-L decomposition).
+
+Dual-quant formulation: the host pre-quantizes to integers; this kernel
+computes the exact integer Lorenzo difference from 8 shifted views and
+narrows to uint8 codes + outlier flags. Shifted views (rather than halo
+exchange) keep every BlockSpec a plain disjoint tile — the idiomatic way
+to express a 1-cell stencil to the Mosaic compiler.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RADIUS = 127
+CENTER = 128
+TILE = (8, 8, 128)
+
+
+def _kernel(p, px, py, pz, pxy, pxz, pyz, pxyz, codes_ref, outl_ref, cfull_ref):
+    c = p[...] - px[...] - py[...] - pz[...] + pxy[...] + pxz[...] + pyz[...] - pxyz[...]
+    out = jnp.abs(c) > RADIUS
+    codes_ref[...] = jnp.where(out, 0, jnp.clip(c, -RADIUS, RADIUS) + CENTER).astype(jnp.uint8)
+    outl_ref[...] = out.astype(jnp.uint8)
+    cfull_ref[...] = c
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def lorenzo3d_codes(pq: jnp.ndarray, interpret: bool = True):
+    """pq: (X,Y,Z) int32 pre-quantized values, dims multiples of TILE.
+
+    Returns (codes u8, outlier u8, full int32 codes)."""
+    X, Y, Z = pq.shape
+    assert X % TILE[0] == 0 and Y % TILE[1] == 0 and Z % TILE[2] == 0, "pad to tile multiples"
+
+    def shift(ax_mask):
+        s = pq
+        for ax, m in enumerate(ax_mask):
+            if m:
+                pad = [(0, 0)] * 3
+                pad[ax] = (1, 0)
+                s = jnp.pad(s, pad)[tuple(slice(0, -1) if a == ax else slice(None) for a in range(3))]
+        return s
+
+    views = [shift(m) for m in
+             [(0, 0, 0), (1, 0, 0), (0, 1, 0), (0, 0, 1), (1, 1, 0), (1, 0, 1), (0, 1, 1), (1, 1, 1)]]
+    grid = (X // TILE[0], Y // TILE[1], Z // TILE[2])
+    spec = pl.BlockSpec(TILE, lambda i, j, k: (i, j, k))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec] * 8,
+        out_specs=(spec, spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(pq.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(pq.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(pq.shape, jnp.int32),
+        ),
+        interpret=interpret,
+    )(*views)

@@ -1,0 +1,17 @@
+"""Jitted wrapper: float field -> Lorenzo uint8 codes via the Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .lorenzo3d import TILE, lorenzo3d_codes
+
+
+def lorenzo_encode_pallas(x: np.ndarray, twoeb: float, interpret: bool = True):
+    """x: (X,Y,Z) f32. Returns (codes u8, outl bool, cfull i32) on the unpadded shape."""
+    pq = np.asarray(jnp.rint(jnp.asarray(x) / jnp.float32(twoeb)).astype(jnp.int32))
+    pads = [(0, (-s) % t) for s, t in zip(x.shape, TILE)]
+    pqp = np.pad(pq, pads)
+    codes, outl, cfull = lorenzo3d_codes(jnp.asarray(pqp), interpret)
+    sl = tuple(slice(0, s) for s in x.shape)
+    return np.asarray(codes)[sl], np.asarray(outl)[sl].astype(bool), np.asarray(cfull)[sl]

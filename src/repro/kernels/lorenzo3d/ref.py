@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: the core Lorenzo encoder."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lorenzo import lorenzo_encode
+
+
+def lorenzo_encode_ref(x: np.ndarray, twoeb: float):
+    codes, outl, cfull, _ = lorenzo_encode(jnp.asarray(x), jnp.float32(twoeb), 3)
+    return np.asarray(codes), np.asarray(outl), np.asarray(cfull)

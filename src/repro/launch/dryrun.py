@@ -1,0 +1,218 @@
+"""Multi-pod dry-run: .lower().compile() for every (arch x shape x mesh).
+
+Proves the distribution config is coherent without hardware: per cell we
+lower the step under the production mesh, compile, and record
+memory_analysis / cost_analysis / the collective schedule (operand bytes of
+all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute
+parsed from the compiled HLO) into experiments/dryrun/<cell>.json for the
+roofline analysis (benchmarks/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--compress-pods]
+"""
+from __future__ import annotations
+
+# The dry-run needs 512 placeholder devices; jax locks the device count on
+# first init, so these two lines MUST precede every other import
+# (including any `from repro...`).
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import LONG_CONTEXT_OK, SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.runtime import partitioning as part
+from repro.runtime import sharding_rules as rules_mod
+from repro.runtime.steps import batch_pspecs, make_prefill_step, make_serve_step, make_train_step, state_pspecs
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)\[([\d,]*)\]")
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of collective ops in the (SPMD-partitioned) HLO,
+    keyed "op" and "op/dtype" (dtype split diagnoses e.g. f32 gathers that
+    should be bf16)."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_blob, op = m.group(2), m.group(3)
+        for sm in _SHAPE_RE.finditer(shapes_blob):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes = n * _BYTES[dt]
+            out[op] = out.get(op, 0) + nbytes
+            out[f"{op}/{dt}"] = out.get(f"{op}/{dt}", 0) + nbytes
+    return out
+
+
+def _unit_variant(cfg, k: int):
+    """Config with k pattern-group units and UNROLLED layers: compiled
+    cost_analysis cannot see inside while-loop bodies, so the cost probes
+    inline everything and the totals extrapolate affinely in k."""
+    import dataclasses
+
+    from repro.runtime.sharding_rules import use_fsdp, use_seqpar
+
+    return dataclasses.replace(
+        cfg,
+        n_layers=cfg.first_dense + k * len(cfg.pattern),
+        enc_layers=k if cfg.enc_layers else 0,
+        scan_layers=False,
+        force_fsdp=int(use_fsdp(cfg)),      # pin the FULL model's sharding policy
+        force_seqpar=int(use_seqpar(cfg)),
+    )
+
+
+def _compile_once(arch, shape, cfg, mesh, *, compress_pods, donate, rules_override):
+    npods = mesh.shape.get("pod", 0) if compress_pods else 0
+    kind, specs = input_specs(arch, shape, npods=npods, cfg=cfg)
+    rules = rules_mod.activation_rules(cfg, mesh)
+    if rules_override:
+        rules.update(rules_override)
+    rec = {"kind": kind}
+    t0 = time.time()
+    with part.mesh_rules(mesh, rules):
+        if kind == "train":
+            step = make_train_step(cfg, mesh, compress_pods=compress_pods)
+            st_spec = state_pspecs(specs["state"], cfg, mesh)
+            b_spec = batch_pspecs(specs["batch"], mesh)
+            in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), (st_spec, b_spec))
+            jf = jax.jit(step, in_shardings=in_sh, out_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), st_spec), None), donate_argnums=(0,) if donate else ())
+            lowered = jf.lower(specs["state"], specs["batch"])
+        elif kind == "prefill":
+            step = make_prefill_step(cfg)
+            p_spec = rules_mod.tree_pspecs(specs["params"], cfg, mesh)
+            b_spec = batch_pspecs(specs["batch"], mesh)
+            in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), (p_spec, b_spec))
+            jf = jax.jit(step, in_shardings=in_sh)
+            lowered = jf.lower(specs["params"], specs["batch"])
+        else:  # decode
+            step = make_serve_step(cfg)
+            p_spec = rules_mod.tree_pspecs(specs["params"], cfg, mesh)
+            c_spec = rules_mod.cache_pspecs(specs["cache"], cfg, mesh, rules)
+            t_spec = batch_pspecs(specs["token"], mesh)
+            in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), (p_spec, c_spec, t_spec, P()))
+            out_sh = (None, jax.tree.map(lambda s: NamedSharding(mesh, s), c_spec))
+            jf = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(1,) if donate else ())
+            lowered = jf.lower(specs["params"], specs["cache"], specs["token"], specs["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        # memory_analysis is PER DEVICE (the partitioned module)
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        # flops / bytes are PER DEVICE and count each scan body ONCE
+        rec["cost"] = {"flops": float(cost.get("flops", 0.0)), "bytes": float(cost.get("bytes accessed", 0.0))}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["n_partitions"] = mesh.size
+    return rec
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, compress_pods: bool = False, donate: bool = True,
+             rules_override=None, cfg_override=None, tag: str = "", extrapolate: bool = True):
+    """Full-model compile proof + (optionally) exact per-step cost totals via
+    two reduced-depth compiles: cost(k units) is affine in k, so
+    total = c(1) + (G-1) * (c(2) - c(1)) with G = cfg.n_groups."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": dict(mesh.shape),
+        "compress_pods": bool(compress_pods), "tag": tag,
+    }
+    full = _compile_once(arch, shape, cfg, mesh, compress_pods=compress_pods, donate=donate, rules_override=rules_override)
+    rec.update(full)
+    if extrapolate:
+        G = cfg.n_groups
+        c1 = _compile_once(arch, shape, _unit_variant(cfg, 1), mesh, compress_pods=compress_pods, donate=donate, rules_override=rules_override)
+        c2 = _compile_once(arch, shape, _unit_variant(cfg, 2), mesh, compress_pods=compress_pods, donate=donate, rules_override=rules_override)
+        tot = {}
+        for key in ("flops", "bytes"):
+            d = c2["cost"][key] - c1["cost"][key]
+            tot[key] = c1["cost"][key] + (G - 1) * d
+        colls = {}
+        for op in set(c1["collectives"]) | set(c2["collectives"]):
+            a, b = c1["collectives"].get(op, 0), c2["collectives"].get(op, 0)
+            # clamp: XLA occasionally swaps strategies between k=1 and k=2
+            colls[op] = max(a + (G - 1) * (b - a), max(a, b))
+        rec["cost_total"] = tot                     # per device, full depth
+        rec["collectives_total"] = colls            # per device, full depth
+        rec["unit_costs"] = {"c1": c1["cost"], "c2": c2["cost"], "G": G}
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--compress-pods", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    todo = list(cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            name = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}{('__' + args.tag) if args.tag else ''}"
+            try:
+                # cost extrapolation only needed on the single-pod mesh (roofline)
+                rec = run_cell(arch, shape, multi_pod=mp, compress_pods=args.compress_pods and mp,
+                               tag=args.tag, extrapolate=not mp)
+                (OUT_DIR / f"{name}.json").write_text(json.dumps(rec, indent=1))
+                tot = rec.get("cost_total", rec["cost"])
+                coll = sum(v for k, v in rec.get("collectives_total", rec["collectives"]).items() if "/" not in k)
+                mem = rec["memory"]
+                perdev = ((mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0) + (mem["output_bytes"] or 0) - (mem["alias_bytes"] or 0))
+                print(
+                    f"OK   {name}: compile={rec['compile_s']}s flops/dev={tot['flops']:.3e} "
+                    f"bytes/dev={tot['bytes']:.3e} coll/dev={coll:.3e}B mem/dev={perdev / 2**30:.2f}GiB"
+                )
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures += 1
+                print(f"FAIL {name}: {type(e).__name__}: {e}")
+                traceback.print_exc(limit=3)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

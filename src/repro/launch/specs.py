@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input — no device allocation.
+
+input_specs(arch, shape) gives the *step argument* specs for the cell:
+  train_4k   -> train_step(state, batch)
+  prefill_32k-> prefill_step(params, batch)
+  decode_32k / long_500k -> serve_step(params, cache, token, pos)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig
+from repro.models import init_cache, init_params
+from repro.optim import init_opt
+from repro.runtime.steps import TrainState, make_train_state
+
+
+def batch_specs(cfg: ModelConfig, seq: int, gbatch: int) -> dict:
+    """Training/prefill batch: tokens+labels (+ stub-frontend embeddings)."""
+    text = seq
+    out = {}
+    if cfg.stub_frontend == "vit":
+        text = seq - cfg.n_img_tokens
+        out["img"] = jax.ShapeDtypeStruct((gbatch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers:
+        out["frames"] = jax.ShapeDtypeStruct((gbatch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    out["tokens"] = jax.ShapeDtypeStruct((gbatch, text), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((gbatch, text), jnp.int32)
+    return out
+
+
+def state_specs(cfg: ModelConfig, *, npods: int = 0) -> TrainState:
+    return jax.eval_shape(lambda: make_train_state(cfg, jax.random.PRNGKey(0), npods=npods))
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg: ModelConfig, gbatch: int, seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, gbatch, seq))
+
+
+def input_specs(arch: str, shape: str, *, npods: int = 0, cfg: ModelConfig | None = None):
+    """Returns (kind, specs dict) for the (arch x shape) cell."""
+    cfg = cfg or get_config(arch)
+    seq, gbatch, kind = SHAPES[shape]
+    if kind == "train":
+        return kind, {
+            "state": state_specs(cfg, npods=npods),
+            "batch": batch_specs(cfg, seq, gbatch),
+        }
+    if kind == "prefill":
+        return kind, {
+            "params": params_specs(cfg),
+            "batch": batch_specs(cfg, seq, gbatch),
+        }
+    # decode: one new token against a cache of `seq`
+    return kind, {
+        "params": params_specs(cfg),
+        "cache": cache_specs(cfg, gbatch, seq),
+        "token": jax.ShapeDtypeStruct((gbatch,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,381 @@
+"""Model assembly: one parameterized stack covering all 10 assigned archs.
+
+Layers are tiled from cfg.pattern and scanned in *pattern groups* (HLO size
+stays O(|pattern|), compile time flat in depth — 88-layer granite compiles
+as one scanned group). Heterogeneous patterns (gemma3 5L+1G, recurrentgemma
+RRL...) put the whole repeating unit inside the scan body. deepseek's dense
+prefix runs as explicit python layers before the scan.
+
+Entry points:
+  init_params(cfg, rng)          -> params pytree
+  forward(params, cfg, batch)    -> (logits, aux)      [train/eval]
+  loss_fn(params, cfg, batch)    -> scalar
+  prefill(params, cfg, batch)    -> (logits, cache)
+  decode_step(params, cfg, token, pos, cache) -> (logits, cache)
+  init_cache(cfg, batch, seq_len) -> cache pytree       [decode entry state]
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.runtime import partitioning as part
+
+from . import rglru as rg
+from . import ssm as ssm_mod
+from .layers import (
+    CDTYPE,
+    _dense_init,
+    attention,
+    attention_decode,
+    attention_prefill,
+    init_attention,
+    init_mlp,
+    init_moe,
+    mlp,
+    moe_ffn,
+    rms_norm,
+)
+
+# ------------------------------------------------------------------ helpers
+def _scan_groups(f, x, xs_tree, cfg: ModelConfig):
+    """lax.scan over stacked pattern groups, or a python-unrolled loop when
+    cfg.scan_layers=False (used by the dry-run cost probes: compiled
+    cost_analysis cannot see inside while-loop bodies)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(f, x, xs_tree)
+    G = jax.tree.leaves(xs_tree)[0].shape[0]
+    ys = []
+    for g in range(G):
+        sl = jax.tree.map(lambda a: a[g], xs_tree)
+        x, y = f(x, sl)
+        ys.append(y)
+    ys_stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return x, ys_stacked
+
+
+def _layer_kinds(cfg: ModelConfig):
+    """(kind, is_moe) per scanned pattern position."""
+    out = []
+    for k in cfg.pattern:
+        is_moe = cfg.n_experts > 0 and k in ("attn", "local")
+        out.append((k, is_moe))
+    return tuple(out)
+
+
+def _remat(f, cfg: ModelConfig):
+    if not cfg.remat:
+        return f
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif cfg.remat_policy == "mixer":
+        # save each layer's mixer output (small: B,S,d) — backward skips the
+        # attention/SSM recompute AND the qkv weight re-gathers it would need
+        policy = jax.checkpoint_policies.save_only_these_names("mixer_out")
+    return jax.checkpoint(f, prevent_cse=False, policy=policy)
+
+
+def _d(x):
+    return x.astype(CDTYPE)
+
+
+# ------------------------------------------------------------------ init
+def init_block(key, cfg: ModelConfig, kind: str, *, moe: bool, cross: bool = False, dense_ff: int | None = None):
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in ("attn", "local", "bidir"):
+        p["attn"] = init_attention(ks[0], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rg.init_rglru(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_x"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["cross"] = init_attention(ks[1], cfg)
+    if kind != "ssm" and (cfg.d_ff > 0 or moe):
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["moe" if moe else "mlp"] = init_moe(ks[2], cfg) if moe else init_mlp(ks[2], cfg, dense_ff)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict = {
+        "embed": _dense_init(ks[0], (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(ks[1], (cfg.d_model, cfg.vocab), scale=0.02)
+    cross = cfg.enc_layers > 0
+    # dense prefix (deepseek first_dense)
+    prefix = []
+    pk = jax.random.split(ks[2], max(cfg.first_dense, 1))
+    for i in range(cfg.first_dense):
+        prefix.append(init_block(pk[i], cfg, "attn", moe=False, cross=cross, dense_ff=cfg.d_ff))
+    if prefix:
+        params["prefix"] = prefix
+    # scanned pattern groups
+    kinds = _layer_kinds(cfg)
+    G = cfg.n_groups
+    stack = []
+    for p_i, (kind, moe) in enumerate(kinds):
+        keys = jax.random.split(jax.random.fold_in(ks[3], p_i), G)
+        stack.append(jax.vmap(lambda k: init_block(k, cfg, kind, moe=moe, cross=cross))(keys))
+    params["stack"] = stack
+    if cfg.enc_layers:  # whisper encoder
+        keys = jax.random.split(ks[4], cfg.enc_layers)
+        params["enc_stack"] = [jax.vmap(lambda k: init_block(k, cfg, "bidir", moe=False))(keys)]
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+def block_apply(x, p, cfg: ModelConfig, kind: str, moe: bool, memory=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local", "bidir"):
+        m = attention(h, p["attn"], cfg, kind=kind)
+    elif kind == "ssm":
+        m = ssm_mod.ssm_block(h, p["ssm"], cfg)
+    else:
+        m = rg.rglru_block(h, p["rglru"], cfg)
+    m = checkpoint_name(m, "mixer_out")
+    x = x + m
+    if "cross" in p and memory is not None:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + attention(h, p["cross"], cfg, kind="cross", memory=memory)
+    if "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        f, aux = moe_ffn(h, p["moe"], cfg)
+        x = x + f
+    elif "mlp" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(h, p["mlp"], cfg)
+    x = part.shard(x, "batch", "act_seq", "embed")
+    return x, aux
+
+
+# ------------------------------------------------------------------ forward
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    x = _d(params["embed"])[tokens] * math.sqrt(cfg.d_model)
+    if cfg.stub_frontend == "vit" and "img" in batch:
+        x = jnp.concatenate([_d(batch["img"]), x], axis=1)
+    return part.shard(x, "batch", "act_seq", "embed")
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub frame embeddings (B, enc_seq, d)."""
+    x = part.shard(_d(frames), "batch", "act_seq", "embed")
+
+    def grp(x, sl):
+        x, _ = block_apply(x, sl, cfg, "bidir", False)
+        return x, None
+
+    f = _remat(grp, cfg)
+    x, _ = _scan_groups(f, x, params["enc_stack"][0], cfg)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # bf16 operands, fp32 accumulation: the head gather moves bf16 and the
+    # MXU accumulates in fp32 — logits numerics unchanged at half the bytes
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(CDTYPE), head.astype(CDTYPE),
+                        preferred_element_type=jnp.float32)
+    return part.shard(logits, "batch", "act_seq", "vocab")
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """Full-sequence forward. Returns (logits (B,S,V), aux loss scalar)."""
+    memory = _encode(params, cfg, batch["frames"]) if cfg.enc_layers else None
+    x = _embed_inputs(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    for p in params.get("prefix", []):
+        x, aux = block_apply(x, p, cfg, "attn", False, memory)
+        aux_total += aux
+    kinds = _layer_kinds(cfg)
+
+    def group_fn(x, slices):
+        aux_g = jnp.zeros((), jnp.float32)
+        for p_i, (kind, moe) in enumerate(kinds):
+            x, aux = block_apply(x, slices[p_i], cfg, kind, moe, memory)
+            aux_g += aux
+        return x, aux_g
+
+    f = _remat(group_fn, cfg)
+    x, auxs = _scan_groups(f, x, tuple(params["stack"]), cfg)
+    return _logits(params, cfg, x), aux_total + auxs.sum()
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.stub_frontend == "vit" and "img" in batch:  # image positions carry no loss
+        pad = jnp.full(batch["img"].shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # label pick via masked reduce (NOT take_along_axis: a gather over the
+    # model-sharded vocab axis would replicate the full logits per device)
+    iota_v = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    ll = jnp.sum(jnp.where(labels[..., None] == iota_v, logits, 0.0), axis=-1)
+    nll = jnp.where(mask, lse - ll, 0.0)
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+    return loss + cfg.aux_loss_coef * aux
+
+
+# ------------------------------------------------------------------ caches
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=CDTYPE):
+    """Decode-entry cache: capacity seq_len KV (window for local), states for
+    ssm/rglru, precomputed cross-attn KV for enc-dec."""
+    Hk, dh = cfg.n_kv_heads, cfg.d_head
+
+    def kv(C):
+        if cfg.kv_quant:
+            return {
+                "k": jnp.zeros((batch, C, Hk, dh), jnp.int8),
+                "v": jnp.zeros((batch, C, Hk, dh), jnp.int8),
+                "k_scale": jnp.zeros((batch, C, Hk), jnp.float32),
+                "v_scale": jnp.zeros((batch, C, Hk), jnp.float32),
+            }
+        return {"k": jnp.zeros((batch, C, Hk, dh), dtype), "v": jnp.zeros((batch, C, Hk, dh), dtype)}
+
+    def one(kind):
+        if kind == "attn":
+            c = kv(seq_len)
+        elif kind == "local":
+            c = kv(min(cfg.window, seq_len))
+        elif kind == "ssm":
+            c = ssm_mod.ssm_init_cache(cfg, batch, dtype)
+        else:
+            c = rg.rglru_init_cache(cfg, batch, dtype)
+        if cfg.enc_layers:
+            c = dict(c, xk=jnp.zeros((batch, cfg.enc_seq, Hk, dh), dtype), xv=jnp.zeros((batch, cfg.enc_seq, Hk, dh), dtype))
+        return c
+
+    G = cfg.n_groups
+    stack = []
+    for kind, _ in _layer_kinds(cfg):
+        c = one(kind)
+        stack.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), c))
+    cache = {"stack": stack}
+    if cfg.first_dense:
+        cache["prefix"] = [one("attn") for _ in range(cfg.first_dense)]
+    return cache
+
+
+def _block_decode(x1, p, cfg, kind, cache, pos):
+    h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        m, new = attention_decode(h, p["attn"], cfg, cache, pos, kind=kind)
+        new_cache = dict(cache, **new)
+    elif kind == "ssm":
+        m, new = ssm_mod.ssm_decode(h, p["ssm"], cfg, {"state": cache["state"], "conv": cache["conv"]})
+        new_cache = dict(cache, **new)
+    else:
+        m, new = rg.rglru_decode(h, p["rglru"], cfg, {"h": cache["h"], "conv": cache["conv"]})
+        new_cache = dict(cache, **new)
+    x1 = x1 + m
+    if "cross" in p:
+        h = rms_norm(x1, p["ln_x"], cfg.norm_eps)
+        m, _ = attention_decode(h, p["cross"], cfg, {"k": cache["xk"], "v": cache["xv"]}, pos, kind="cross")
+        x1 = x1 + m
+    if "moe" in p:
+        h = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        f, _ = moe_ffn(h, p["moe"], cfg)
+        x1 = x1 + f
+    elif "mlp" in p:
+        h = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        x1 = x1 + mlp(h, p["mlp"], cfg)
+    return x1, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache):
+    """token: (B,) int32; pos: scalar int32 (slot of the new token).
+
+    Returns (logits (B,V), new cache)."""
+    x = _d(params["embed"])[token][:, None] * math.sqrt(cfg.d_model)  # (B,1,d)
+    new_prefix = []
+    for p, c in zip(params.get("prefix", []), cache.get("prefix", [])):
+        x, nc = _block_decode(x, p, cfg, "attn", c, pos)
+        new_prefix.append(nc)
+    kinds = _layer_kinds(cfg)
+
+    def group_fn(x, sl):
+        pslice, cslice = sl
+        new_slices = []
+        for p_i, (kind, _) in enumerate(kinds):
+            x, nc = _block_decode(x, pslice[p_i], cfg, kind, cslice[p_i], pos)
+            new_slices.append(nc)
+        return x, tuple(new_slices)
+
+    x, new_stack = _scan_groups(group_fn, x, (tuple(params["stack"]), tuple(cache["stack"])), cfg)
+    logits = _logits(params, cfg, x)[:, 0]
+    new_cache = {"stack": list(new_stack)}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_len: int | None = None):
+    """Run the context once, returning (last-token logits, decode cache)."""
+    memory = _encode(params, cfg, batch["frames"]) if cfg.enc_layers else None
+    x = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    C = cache_len or S
+    aux_prefix = []
+
+    def block_prefill(x, p, kind):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if kind in ("attn", "local"):
+            m, kvc = attention_prefill(h, p["attn"], cfg, kind=kind, cache_len=C)
+        elif kind == "ssm":
+            m, kvc = ssm_mod.ssm_block(h, p["ssm"], cfg, return_cache=True)
+        else:
+            m, kvc = rg.rglru_block(h, p["rglru"], cfg, return_cache=True)
+        x = x + m
+        if "cross" in p and memory is not None:
+            h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            x = x + attention(h, p["cross"], cfg, kind="cross", memory=memory)
+            kvc = dict(kvc,
+                       xk=(memory @ p["cross"]["wk"].astype(x.dtype)).reshape(x.shape[0], -1, cfg.n_kv_heads, cfg.d_head),
+                       xv=(memory @ p["cross"]["wv"].astype(x.dtype)).reshape(x.shape[0], -1, cfg.n_kv_heads, cfg.d_head))
+        if "moe" in p:
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            f, _ = moe_ffn(h, p["moe"], cfg)
+            x = x + f
+        elif "mlp" in p:
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp(h, p["mlp"], cfg)
+        return x, kvc
+
+    new_prefix = []
+    for p in params.get("prefix", []):
+        x, c = block_prefill(x, p, "attn")
+        new_prefix.append(c)
+    kinds = _layer_kinds(cfg)
+
+    def group_fn(x, pslice):
+        cs = []
+        for p_i, (kind, _) in enumerate(kinds):
+            x, c = block_prefill(x, pslice[p_i], kind)
+            cs.append(c)
+        return x, tuple(cs)
+
+    f = _remat(group_fn, cfg)
+    x, stack_caches = _scan_groups(f, x, tuple(params["stack"]), cfg)
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    cache = {"stack": list(stack_caches)}
+    if new_prefix:
+        cache["prefix"] = new_prefix
+    return logits, cache

@@ -1,0 +1,85 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Gated linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * u_t) with
+input-dependent a_t = exp(-c * softplus(Lambda) * r_t). Training/prefill
+runs a log-depth jax.lax.associative_scan over the sequence; decode is a
+one-step update. Combined with windowed local attention this gives the
+bounded-state long_500k path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import _dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d, L = cfg.d_model, cfg.lru_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gelu": _dense_init(ks[0], (d, L)),
+        "w_x": _dense_init(ks[1], (d, L)),
+        "conv_w": _dense_init(ks[2], (cfg.conv_width, L), scale=0.2),
+        "w_r": _dense_init(ks[3], (L, L)),
+        "w_i": _dense_init(ks[4], (L, L)),
+        "lam": jnp.full((L,), 1.0, jnp.float32),  # softplus(1) ~ 1.31
+        "w_out": _dense_init(ks[5], (L, d)),
+    }
+
+
+def _gates(u, p):
+    r = jax.nn.sigmoid((u @ p["w_r"].astype(u.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_i"].astype(u.dtype)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def _conv(x, w):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+
+
+def rglru_block(x, p, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence Griffin recurrent block. x: (B,S,d)."""
+    gate = jax.nn.gelu(x @ p["w_gelu"].astype(x.dtype))
+    xin = x @ p["w_x"].astype(x.dtype)
+    u = _conv(xin, p["conv_w"])
+    a, b = _gates(u, p)
+
+    def combine(l, r):
+        return l[0] * r[0], r[0] * l[1] + r[1]
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    if return_cache:
+        K = cfg.conv_width
+        return out, {"h": h[:, -1], "conv": xin[:, x.shape[1] - (K - 1) :]}
+    return out
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    L = cfg.lru_dim
+    return {
+        "h": jnp.zeros((batch, L), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, L), dtype),
+    }
+
+
+def rglru_decode(x1, p, cfg: ModelConfig, cache):
+    """One-token update. x1: (B,1,d)."""
+    gate = jax.nn.gelu(x1 @ p["w_gelu"].astype(x1.dtype))
+    xin = x1 @ p["w_x"].astype(x1.dtype)  # (B,1,L)
+    win = jnp.concatenate([cache["conv"], xin], 1)  # (B,K,L)
+    u = jnp.einsum("bkl,kl->bl", win, p["conv_w"].astype(x1.dtype))[:, None]
+    a, b = _gates(u, p)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = h[:, None].astype(x1.dtype) * gate
+    return y @ p["w_out"].astype(x1.dtype), {"h": h, "conv": win[:, 1:]}

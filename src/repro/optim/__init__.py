@@ -1,0 +1,3 @@
+from .adamw import OptState, adamw_update, clip_by_global_norm, init_opt  # noqa: F401
+from .grad_compress import pod_allreduce_compressed, quantize_shard  # noqa: F401
+from .schedule import cosine_with_warmup  # noqa: F401

@@ -1,0 +1,48 @@
+"""AdamW with fully-sharded states (m/v mirror parameter shardings)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def init_opt(params) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(m=jax.tree.map(z, params), v=jax.tree.map(z, params), step=jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, opt: OptState, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    step = opt.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(m=new_m, v=new_v, step=step)

@@ -1,0 +1,160 @@
+"""Jittable train / prefill / serve steps with explicit shardings.
+
+make_train_step: loss -> grads -> clip -> [cross-pod compressed exchange]
+-> AdamW. Within a pod, gradient reduction and FSDP gathers are GSPMD's
+(overlapped by the latency-hiding scheduler); across pods the exchange is
+the explicit int8 error-feedback collective from repro.optim.grad_compress,
+running inside jax.shard_map manual over the 'pod' axis only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn, prefill
+from repro.optim import adamw_update, clip_by_global_norm, init_opt, pod_allreduce_compressed
+from repro.optim.adamw import OptState
+from repro.runtime import partitioning as part
+from repro.runtime import sharding_rules as rules_mod
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OptState
+    resid: Any  # error-feedback residuals, leading 'pod' axis; None-like if off
+
+
+def make_train_state(cfg: ModelConfig, rng, *, npods: int = 0):
+    params = init_params(cfg, rng)
+    opt = init_opt(params)
+    resid = ()
+    if npods:
+        resid = jax.tree.map(lambda p: jnp.zeros((npods,) + p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt, resid=resid)
+
+
+def state_pspecs(state_shapes, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpecs for a TrainState of ShapeDtypeStructs."""
+    p_spec = rules_mod.tree_pspecs(state_shapes.params, cfg, mesh)
+    m_spec = rules_mod.tree_pspecs(state_shapes.opt.m, cfg, mesh)
+    v_spec = rules_mod.tree_pspecs(state_shapes.opt.v, cfg, mesh)
+    if isinstance(state_shapes.resid, tuple) and state_shapes.resid == ():
+        r_spec = ()
+    else:
+        r_spec = jax.tree.map(lambda ps: P("pod", *ps), p_spec)
+    return TrainState(
+        params=p_spec,
+        opt=OptState(m=m_spec, v=v_spec, step=P()),
+        resid=r_spec,
+    )
+
+
+def batch_pspecs(batch_shapes, mesh: Mesh):
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+    def one(leaf):
+        size = 1
+        for a in dp:
+            size *= mesh.shape[a]
+        ax = dp if leaf.shape and leaf.shape[0] % size == 0 else None
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh | None, *, lr=3e-4, grad_clip=1.0, compress_pods=False):
+    """Returns step(state, batch) -> (state, metrics). Call under part.mesh_rules."""
+
+    def _cast_params(params):
+        """bf16_params: cast fp32 matrices to bf16 pinned to their sharding,
+        so FSDP all-gathers move bf16, not fp32 (gather-after-cast)."""
+        if not cfg.bf16_params:
+            return params
+
+        specs = rules_mod.tree_pspecs(params, cfg, mesh) if mesh is not None else jax.tree.map(lambda _: None, params)
+
+        def one(p, s):
+            if hasattr(p, "dtype") and p.dtype == jnp.float32 and p.ndim >= 2:
+                c = p.astype(jnp.bfloat16)
+                if s is not None:
+                    c = jax.lax.with_sharding_constraint(c, NamedSharding(mesh, s))
+                return c
+            return p
+
+        return jax.tree.map(one, params, specs)
+
+    def loss_of(params, batch):
+        return loss_fn(_cast_params(params), cfg, batch)
+
+    def plain_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt, lr)
+        return TrainState(new_params, new_opt, state.resid), {"loss": loss, "grad_norm": gnorm}
+
+    if not (compress_pods and mesh is not None and "pod" in mesh.shape):
+        return plain_step
+
+    # Compressed cross-pod exchange without manual regions ("vmap islands"):
+    # the batch gets a leading pod axis sharded over 'pod'; vmap(grad) then
+    # yields PER-POD gradients (no automatic cross-pod psum). Each pod
+    # quantizes its gradient (+ error-feedback residual) to int8 with a
+    # per-tensor scale; replicating the int8 tree over 'pod' lowers to an
+    # int8 all-gather — the 4x-smaller wire format — and every device forms
+    # the average locally. Pure GSPMD: XLA schedules/overlaps the gathers.
+    npods = mesh.shape["pod"]
+
+    def _pod_spec(leaf) -> NamedSharding:
+        return NamedSharding(mesh, P("pod", *([None] * (leaf.ndim - 1))))
+
+    def compressed_step(state: TrainState, batch):
+        bb = jax.tree.map(lambda x: x.reshape((npods, x.shape[0] // npods) + x.shape[1:]), batch)
+        bb = jax.tree.map(lambda x: jax.lax.with_sharding_constraint(x, _pod_spec(x)), bb)
+        losses, grads_p = jax.vmap(lambda b: jax.value_and_grad(loss_of)(state.params, b))(bb)
+
+        def exchange(g, r):
+            g = jax.lax.with_sharding_constraint(g.astype(jnp.float32), _pod_spec(g))
+            t = g + r
+            axes = tuple(range(1, t.ndim))
+            scale = jnp.maximum(jnp.max(jnp.abs(t), axis=axes, keepdims=True), 1e-30) / 127.0
+            q = jnp.clip(jnp.rint(t / scale), -127, 127).astype(jnp.int8)
+            new_r = t - q.astype(jnp.float32) * scale
+            # replicate int8 payload across pods == all-gather on the wire
+            q_rep = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, P(*([None] * q.ndim))))
+            s_rep = jax.lax.with_sharding_constraint(scale, NamedSharding(mesh, P(*([None] * scale.ndim))))
+            avg = jnp.mean(q_rep.astype(jnp.float32) * s_rep, axis=0)
+            return avg, new_r
+
+        flat_g, tdef = jax.tree.flatten(grads_p)
+        flat_r = tdef.flatten_up_to(state.resid)
+        pairs = [exchange(g, r) for g, r in zip(flat_g, flat_r)]
+        grads = tdef.unflatten([p[0] for p in pairs])
+        new_resid = tdef.unflatten([p[1] for p in pairs])
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt, lr)
+        return TrainState(new_params, new_opt, new_resid), {"loss": losses.mean(), "grad_norm": gnorm}
+
+    return compressed_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, batch):
+        return prefill(params, cfg, batch)
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params, cache, token, pos):
+        return decode_step(params, cfg, token, pos, cache)
+
+    return step

@@ -1,0 +1,25 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def smooth3d():
+    g = np.linspace(0, 4 * np.pi, 48)
+    X, Y, Z = np.meshgrid(g, g, g, indexing="ij")
+    return (np.sin(X) * np.cos(Y) * np.sin(Z) + 0.05 * np.cos(3 * X)).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def smooth2d():
+    g = np.linspace(0, 6 * np.pi, 96)
+    X, Y = np.meshgrid(g, g, indexing="ij")
+    return (np.sin(X) * np.cos(0.7 * Y)).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def smooth3d_big():
+    """Large smooth field: the regime where the paper's CR ordering holds
+    (small edge-dominated fields don't discriminate the designs)."""
+    g = np.linspace(0, 4 * np.pi, 96)
+    X, Y, Z = np.meshgrid(g, g, g, indexing="ij")
+    return (np.sin(X) * np.cos(Y) * np.sin(Z) + 0.3 * np.exp(-((X - 6) ** 2 + (Y - 6) ** 2) / 8)).astype(np.float32)

@@ -1,0 +1,77 @@
+"""Checkpoint manager: atomicity, lossless/lossy modes, async, restore."""
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((64, 128)).astype(np.float32),
+        "b": rng.standard_normal((128,)).astype(np.float32),
+        "step": np.int32(7),
+        "nested": {"m": rng.standard_normal((4096, 32)).astype(np.float32)},
+    }
+
+
+def test_save_restore_lossless(tmp_path):
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 10)
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype), tree)
+    out, manifest = ckpt.restore(shapes, tmp_path, 10)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["step"] == 10
+
+
+def test_save_restore_error_bounded(tmp_path):
+    tree = {"w": np.random.default_rng(1).standard_normal((256, 256)).astype(np.float32)}
+    ckpt.save(tree, tmp_path, 1, eb=1e-3)
+    out, manifest = ckpt.restore(tree, tmp_path, 1)
+    rng = tree["w"].max() - tree["w"].min()
+    assert np.abs(out["w"] - tree["w"]).max() <= 1e-3 * rng * (1 + 1e-5)
+    assert manifest["cr"] > 1.0
+
+
+def test_latest_and_multiple_steps(tmp_path):
+    tree = _tree()
+    for s in (5, 20, 15):
+        ckpt.save(tree, tmp_path, s)
+    assert ckpt.latest_step(tmp_path) == 20
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """A tmp dir left behind by a crash must not count as a checkpoint."""
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 1)
+    fake_tmp = pathlib.Path(tmp_path) / ".tmp_step_00000099"
+    fake_tmp.mkdir()
+    (fake_tmp / "x.bin").write_bytes(b"garbage")
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_manifest_corruption_detected(tmp_path):
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 3)
+    d = pathlib.Path(tmp_path) / "step_00000003"
+    (d / "manifest.json").write_text("{broken")
+    with pytest.raises(Exception):
+        ckpt.restore(tree, tmp_path, 3)
+
+
+def test_async_checkpointer(tmp_path):
+    saver = ckpt.AsyncCheckpointer(tmp_path)
+    tree = _tree()
+    for s in (1, 2, 3):
+        saver.submit(tree, s)
+    saver.close()
+    assert ckpt.latest_step(tmp_path) in (1, 2, 3)  # at least one published
+    out, _ = ckpt.restore(tree, tmp_path)
+    assert np.array_equal(out["w"], tree["w"])

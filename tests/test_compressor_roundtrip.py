@@ -1,0 +1,97 @@
+"""End-to-end compressor behaviour: the paper's error-bound contract (Eq. 1)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Compressor,
+    CompressorSpec,
+    compression_ratio,
+    cusz_hi_cr,
+    cusz_hi_tp,
+    cusz_i,
+    cusz_l,
+    cuszp2_like,
+    fzgpu_like,
+    max_abs_err,
+)
+
+PRESETS = {
+    "hi-cr": cusz_hi_cr,
+    "hi-tp": cusz_hi_tp,
+    "cusz-l": cusz_l,
+    "cusz-i": cusz_i,
+    "cuszp2": cuszp2_like,
+    "fzgpu": fzgpu_like,
+}
+
+
+@pytest.mark.parametrize("preset", list(PRESETS))
+@pytest.mark.parametrize("eb", [1e-2, 1e-3])
+def test_error_bound_3d(preset, eb, smooth3d):
+    c = PRESETS[preset](eb=eb)
+    buf = c.compress(smooth3d)
+    out = c.decompress(buf)
+    rng = float(smooth3d.max() - smooth3d.min())
+    assert out.shape == smooth3d.shape and out.dtype == np.float32
+    assert max_abs_err(smooth3d, out) <= eb * rng * (1 + 1e-5) + 1e-9
+    assert compression_ratio(smooth3d, buf) > 1.0
+
+
+def test_error_bound_2d(smooth2d):
+    for mk in (cusz_hi_cr, cusz_hi_tp, cusz_l):
+        c = mk(eb=1e-3)
+        out = c.decompress(c.compress(smooth2d))
+        rng = float(smooth2d.max() - smooth2d.min())
+        assert max_abs_err(smooth2d, out) <= 1e-3 * rng * (1 + 1e-5)
+
+
+def test_4d_batched():
+    x = np.random.default_rng(0).standard_normal((3, 24, 20, 28)).astype(np.float32)
+    c = cusz_hi_tp(eb=1e-2)
+    out = c.decompress(c.compress(x))
+    rng = float(x.max() - x.min())
+    assert out.shape == x.shape
+    assert max_abs_err(x, out) <= 1e-2 * rng * (1 + 1e-5)
+
+
+def test_constant_field():
+    x = np.full((32, 32, 32), 3.25, np.float32)
+    c = cusz_hi_cr(eb=1e-3)
+    buf = c.compress(x)
+    assert np.array_equal(c.decompress(buf), x)
+    assert len(buf) < 1024
+
+
+def test_abs_eb_mode():
+    x = np.random.default_rng(1).standard_normal((40, 40)).astype(np.float32) * 100
+    c = Compressor(CompressorSpec(eb=0.5, eb_mode="abs", pipeline="tp"))
+    out = c.decompress(c.compress(x))
+    assert max_abs_err(x, out) <= 0.5 * (1 + 1e-5)
+
+
+def test_ragged_shapes():
+    x = np.random.default_rng(2).standard_normal((19, 35, 50)).astype(np.float32)
+    c = cusz_hi_cr(eb=1e-2)
+    out = c.decompress(c.compress(x))
+    assert out.shape == x.shape
+    rng = float(x.max() - x.min())
+    assert max_abs_err(x, out) <= 1e-2 * rng * (1 + 1e-5)
+
+
+def test_cr_ordering_on_smooth_data(smooth3d_big):
+    """Paper's headline: hi modes beat the baselines on smooth fields."""
+    crs = {}
+    for name, mk in PRESETS.items():
+        c = mk(eb=1e-3)
+        crs[name] = compression_ratio(smooth3d_big, c.compress(smooth3d_big))
+    assert crs["hi-cr"] > crs["cusz-i"] > crs["cuszp2"]
+    assert crs["hi-tp"] > crs["cusz-l"]
+
+
+def test_reorder_and_md_help(smooth3d_big):
+    base = Compressor(CompressorSpec(eb=1e-3, pipeline="cr", autotune=False))
+    no_re = Compressor(CompressorSpec(eb=1e-3, pipeline="cr", autotune=False, reorder=False))
+    oned = Compressor(CompressorSpec(eb=1e-3, pipeline="cr", autotune=False, schemes=("1d",) * 4))
+    cr = compression_ratio(smooth3d_big, base.compress(smooth3d_big))
+    assert cr >= compression_ratio(smooth3d_big, no_re.compress(smooth3d_big)) * 0.98
+    assert cr > compression_ratio(smooth3d_big, oned.compress(smooth3d_big))

@@ -1,0 +1,77 @@
+"""Stage-level lossless roundtrips."""
+import numpy as np
+import pytest
+
+from repro.core.lossless import bitshuffle as bs
+from repro.core.lossless import huffman as hf
+from repro.core.lossless import pipelines as pp
+from repro.core.lossless import rre
+from repro.core.lossless import tcms
+from repro.core.lossless.flenc import fl_decode, fl_encode
+
+
+def _streams():
+    rng = np.random.default_rng(0)
+    yield "random", rng.integers(0, 256, 5000, dtype=np.uint8)
+    yield "skewed", np.minimum(rng.zipf(1.5, 5000), 255).astype(np.uint8)
+    yield "runs", np.repeat(rng.integers(0, 4, 100, dtype=np.uint8), 57)[:5000]
+    yield "zeros", np.zeros(4096, np.uint8)
+    yield "tiny", np.array([128], np.uint8)
+    yield "empty", np.zeros(0, np.uint8)
+
+
+@pytest.mark.parametrize("name,data", list(_streams()))
+def test_huffman_roundtrip(name, data):
+    payload, hdr = hf.encode(data)
+    out = hf.decode(payload, hdr)
+    assert np.array_equal(out, data), name
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("name,data", list(_streams()))
+def test_rre_rze_roundtrip(k, name, data):
+    payload, hdr = rre.rre_encode(data, k)
+    assert np.array_equal(rre.rre_decode(payload, hdr), data)
+    payload, hdr = rre.rze_encode(data, k)
+    assert np.array_equal(rre.rze_decode(payload, hdr), data)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_tcms_bijective(k):
+    rng = np.random.default_rng(k)
+    data = rng.integers(0, 256, 4096, dtype=np.uint8)
+    payload, hdr = tcms.tcms_encode(data, k)
+    assert np.array_equal(tcms.tcms_decode(payload, hdr), data)
+
+
+def test_tcms_concentrates_small_values():
+    """Codes near 128 (zero-centered) must map to few set bits."""
+    data = np.array([128, 129, 127, 130, 126], np.uint8)
+    payload, _ = tcms.tcms_encode(data ^ 0x80, 1)  # center first
+    out = np.frombuffer(payload, np.uint8)
+    assert int(np.unpackbits(out).sum()) <= int(np.unpackbits(data).sum())
+
+
+@pytest.mark.parametrize("name,data", list(_streams()))
+def test_bitshuffle_roundtrip(name, data):
+    payload, hdr = bs.bitshuffle_encode(data)
+    assert np.array_equal(bs.bitshuffle_decode(payload, hdr), data)
+
+
+@pytest.mark.parametrize("pipe", ["cr", "tp", "crz", "hf", "fz", "none"])
+@pytest.mark.parametrize("name,data", list(_streams()))
+def test_pipelines_roundtrip(pipe, name, data):
+    buf = pp.encode(data, pipe)
+    assert np.array_equal(pp.decode(buf), data)
+
+
+def test_cr_pipeline_beats_hf_on_runs():
+    data = np.repeat(np.array([128, 129, 127, 128], np.uint8), 4096)
+    assert len(pp.encode(data, "cr")) < len(pp.encode(data, "hf"))
+
+
+def test_fl_roundtrip():
+    rng = np.random.default_rng(3)
+    codes = (rng.standard_normal(10000) * 40).astype(np.int32)
+    payload, hdr = fl_encode(codes)
+    assert np.array_equal(fl_decode(payload, hdr), codes)

@@ -1,0 +1,70 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import Compressor, CompressorSpec, max_abs_err
+from repro.core.lossless import decode, encode
+from repro.core.lossless.flenc import fl_decode, fl_encode
+from repro.core.lossless.tcms import tcms_decode, tcms_encode
+from repro.core.reorder import level_permutation
+from repro.optim.grad_compress import quantize_shard
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    data=hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=3, min_side=4, max_side=40),
+                    elements=st.floats(-1e4, 1e4, width=32)),
+    eb=st.sampled_from([1e-1, 1e-2, 1e-3]),
+    pipeline=st.sampled_from(["cr", "tp"]),
+)
+@settings(**SETTINGS)
+def test_error_bound_always_holds(data, eb, pipeline):
+    c = Compressor(CompressorSpec(eb=eb, pipeline=pipeline, autotune=False))
+    out = c.decompress(c.compress(data))
+    rng = float(data.max() - data.min()) if data.size else 0.0
+    assert out.shape == data.shape
+    assert max_abs_err(data, out) <= eb * rng * (1 + 1e-4) + 1e-9
+
+
+@given(data=hnp.arrays(np.uint8, st.integers(0, 4096)), pipe=st.sampled_from(["cr", "tp", "hf", "fz"]))
+@settings(**SETTINGS)
+def test_lossless_pipelines_bytes_roundtrip(data, pipe):
+    assert np.array_equal(decode(encode(data, pipe)), data)
+
+
+@given(data=hnp.arrays(np.uint8, st.integers(1, 2048)), k=st.sampled_from([1, 2, 4, 8]))
+@settings(**SETTINGS)
+def test_tcms_bijection(data, k):
+    payload, hdr = tcms_encode(data, k)
+    assert np.array_equal(tcms_decode(payload, hdr), data)
+
+
+@given(codes=hnp.arrays(np.int32, st.integers(0, 3000), elements=st.integers(-(2**30), 2**30 - 1)))
+@settings(**SETTINGS)
+def test_fixed_length_roundtrip(codes):
+    payload, hdr = fl_encode(codes)
+    assert np.array_equal(fl_decode(payload, hdr), codes)
+
+
+@given(dims=st.lists(st.integers(2, 40), min_size=1, max_size=3))
+@settings(**SETTINGS)
+def test_reorder_is_permutation(dims):
+    shape = tuple(dims)
+    perm, pos = level_permutation(shape, 16)
+    n = int(np.prod(shape))
+    assert perm.size <= n
+    assert np.unique(perm).size == perm.size
+    assert (pos[perm] == np.arange(perm.size)).all()
+
+
+@given(t=hnp.arrays(np.float32, st.integers(1, 512), elements=st.floats(-1e6, 1e6, width=32)))
+@settings(**SETTINGS)
+def test_gradient_quantizer_error_bounded(t):
+    import jax.numpy as jnp
+
+    q, scale = quantize_shard(jnp.asarray(t))
+    deq = np.asarray(q, np.float32) * float(scale)
+    assert np.abs(deq - t).max() <= float(scale) * 0.5 + 1e-6 + np.abs(t).max() * 1e-6
