@@ -1,0 +1,130 @@
+"""Lossless hot-path benchmark: MB/s per stage + CR, emitted as JSON.
+
+    PYTHONPATH=src python -m benchmarks.bench_lossless [--out BENCH_lossless.json]
+
+Measures each lossless stage on a 4 MiB quantization-code-like stream (the
+codec's actual workload: Laplacian codes centered on 128) plus the
+end-to-end compressor on a 64^3 smooth float32 field (after JIT warmup).
+Each timing is the best of ``--reps`` runs (timeit-style min-time, which
+rejects scheduler noise on shared hosts); the JSON records the rep count.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import compression_ratio, cusz_hi_cr, max_abs_err
+from repro.core.lossless import bitshuffle as bs
+from repro.core.lossless import huffman as hf
+from repro.core.lossless import pipelines as pp
+from repro.core.lossless import rre, tcms
+
+STREAM_BYTES = 4 << 20
+FIELD_SIDE = 64
+
+
+def _best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def quant_code_stream(nbytes: int = STREAM_BYTES, scale: float = 8.0, seed: int = 0) -> np.ndarray:
+    """Laplacian uint8 codes centered on 128 — the predictor's output law."""
+    rng = np.random.default_rng(seed)
+    return np.clip(np.round(rng.laplace(128.0, scale, nbytes)), 0, 255).astype(np.uint8)
+
+
+def smooth_field(side: int = FIELD_SIDE) -> np.ndarray:
+    g = np.stack(np.meshgrid(*[np.linspace(0, 3, side)] * 3, indexing="ij"))
+    return (np.sin(g[0] * 2.1) * np.cos(g[1] * 1.7) + 0.5 * np.sin(g[2] * 3.3 + g[0])).astype(np.float32)
+
+
+def bench_stage(name, enc, dec, data, reps) -> dict:
+    payload, hdr = enc(data)
+    out = dec(payload, hdr)
+    assert np.array_equal(np.asarray(out).view(np.uint8).reshape(-1), data), name
+    te = _best(lambda: enc(data), reps)
+    td = _best(lambda: dec(payload, hdr), reps)
+    nbytes = len(payload) if isinstance(payload, (bytes, bytearray)) else payload.nbytes
+    return {
+        "stage": name,
+        "enc_mbps": data.size / te / 1e6,
+        "dec_mbps": data.size / td / 1e6,
+        "cr": data.size / max(nbytes, 1),
+    }
+
+
+def run(reps: int = 5) -> dict:
+    data = quant_code_stream()
+    rows = [
+        bench_stage("hf", hf.encode, hf.decode, data, reps),
+        bench_stage("rre4", lambda d: rre.rre_encode(d, 4), rre.rre_decode, data, reps),
+        bench_stage("rze1", lambda d: rre.rze_encode(d, 1), rre.rze_decode, data, reps),
+        bench_stage("tcms8", lambda d: tcms.tcms_encode(d, 8), tcms.tcms_decode, data, reps),
+        bench_stage("bit1", bs.bitshuffle_encode, bs.bitshuffle_decode, data, reps),
+    ]
+    for pipe in ("cr", "tp"):
+        buf = pp.encode(data, pipe)
+        assert np.array_equal(pp.decode(buf), data)
+        te = _best(lambda: pp.encode(data, pipe), reps)
+        td = _best(lambda: pp.decode(buf), reps)
+        rows.append(
+            {
+                "stage": f"pipeline:{pipe}",
+                "enc_mbps": data.size / te / 1e6,
+                "dec_mbps": data.size / td / 1e6,
+                "cr": data.size / len(buf),
+            }
+        )
+    # end-to-end compressor on a smooth field, warmed up (JIT + caches)
+    x = smooth_field()
+    comp = cusz_hi_cr(eb=1e-3)
+    buf = comp.compress(x)
+    y = comp.decompress(buf)
+    rng = float(x.max() - x.min())
+    assert max_abs_err(x, y) <= 1e-3 * rng * (1 + 1e-5) + 1e-9
+    tc = _best(lambda: comp.compress(x), reps)
+    td = _best(lambda: comp.decompress(buf), reps)
+    rows.append(
+        {
+            "stage": "cusz_hi_cr:64^3",
+            "enc_mbps": x.nbytes / tc / 1e6,
+            "dec_mbps": x.nbytes / td / 1e6,
+            "compress_seconds": tc,
+            "decompress_seconds": td,
+            "cr": compression_ratio(x, buf),
+        }
+    )
+    return {
+        "bench": "lossless_hot_path",
+        "stream_bytes": STREAM_BYTES,
+        "field": f"{FIELD_SIDE}^3 float32, eb=1e-3 rel",
+        "timing": f"best of {reps} reps after warmup",
+        "stages": rows,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_lossless.json")
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args(argv)
+    result = run(args.reps)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for r in result["stages"]:
+        print(
+            f"{r['stage']:16s} enc {r['enc_mbps']:8.1f} MB/s   dec {r['dec_mbps']:8.1f} MB/s   CR {r['cr']:.2f}"
+        )
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,9 @@
 
 Two modes per tensor:
   * lossless: raw bytes + zstd (bit-exact; default for optimizer state and
-    anything integer/small);
+    anything integer/small) — falls back to stdlib zlib when the optional
+    ``zstandard`` package is absent, and records which codec was used in
+    the manifest so restore dispatches correctly;
   * error-bounded: the paper's full pipeline (interp predictor + CR
     pipeline) on float tensors reshaped to a 2-D field — weights are not
     spatially smooth like simulation data, so the autotuner typically picks
@@ -10,12 +12,19 @@ Two modes per tensor:
 """
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
-import zstandard
+
+try:  # optional dependency; zlib fallback keeps checkpoints working without it
+    import zstandard
+except ImportError:  # pragma: no cover - depends on the environment
+    zstandard = None
 
 from repro.core import Compressor, CompressorSpec
 
 _ZSTD_LEVEL = 3
+_ZLIB_LEVEL = 6
 
 
 def _as_field(x: np.ndarray) -> np.ndarray:
@@ -39,9 +48,12 @@ def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
         payload = comp.compress(field)
         meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape))
         return payload, meta
-    cctx = zstandard.ZstdCompressor(level=_ZSTD_LEVEL)
-    meta.update(mode="zstd")
-    return cctx.compress(np.ascontiguousarray(x).tobytes()), meta
+    raw = np.ascontiguousarray(x).tobytes()
+    if zstandard is not None:
+        meta.update(mode="zstd")
+        return zstandard.ZstdCompressor(level=_ZSTD_LEVEL).compress(raw), meta
+    meta.update(mode="zlib")
+    return zlib.compress(raw, _ZLIB_LEVEL), meta
 
 
 def decode_tensor(payload: bytes, meta: dict) -> np.ndarray:
@@ -51,5 +63,12 @@ def decode_tensor(payload: bytes, meta: dict) -> np.ndarray:
         comp = Compressor(CompressorSpec(eb=meta["eb"], pipeline="tp", autotune=False))
         field = comp.decompress(payload)
         return field.reshape(-1)[: int(np.prod(shape))].reshape(shape).astype(dtype)
-    raw = zstandard.ZstdDecompressor().decompress(payload)
+    if meta["mode"] == "zlib":
+        raw = zlib.decompress(payload)
+    else:
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint tensor was written with the optional 'zstandard' package; install it to restore"
+            )
+        raw = zstandard.ZstdDecompressor().decompress(payload)
     return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()

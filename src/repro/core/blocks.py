@@ -34,17 +34,35 @@ def pad_field(x: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
     return np.pad(x, pads, mode="edge")
 
 
+def pad_field_batch(xb: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """Batched pad_field: (batch, *spatial) -> (batch, *padded)."""
+    tgt = padded_shape(xb.shape[1:], stride)
+    pads = [(0, 0)] + [(0, t - s) for s, t in zip(xb.shape[1:], tgt)]
+    if all(p == (0, 0) for p in pads[1:]):
+        return xb
+    return np.pad(xb, pads, mode="edge")
+
+
 def gather_blocks(xp: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
     """(padded field) -> (nb, B, B, ...) overlapping closed blocks.
 
     nb = prod((dim-1)/stride); block [i] = xp[stride*i : stride*i + B].
     """
+    return gather_blocks_batch(xp[None], stride)
+
+
+def gather_blocks_batch(xpb: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """Batched gather: (batch, *padded) -> (batch*nb, B, B, ...).
+
+    Block order matches per-item gather_blocks concatenated along axis 0.
+    """
     B = stride + 1
-    win = np.lib.stride_tricks.sliding_window_view(xp, (B,) * xp.ndim)
-    sl = tuple(slice(None, None, stride) for _ in range(xp.ndim))
-    blocks = win[sl]  # (nb0, nb1, ..., B, B, ...)
-    nb = int(np.prod(blocks.shape[: xp.ndim]))
-    return np.ascontiguousarray(blocks.reshape((nb,) + (B,) * xp.ndim))
+    ndim = xpb.ndim - 1
+    win = np.lib.stride_tricks.sliding_window_view(xpb, (B,) * ndim, axis=tuple(range(1, ndim + 1)))
+    sl = (slice(None),) + tuple(slice(None, None, stride) for _ in range(ndim))
+    blocks = win[sl]  # (batch, nb0, nb1, ..., B, B, ...)
+    nb = int(np.prod(blocks.shape[1 : 1 + ndim]))
+    return np.ascontiguousarray(blocks.reshape((xpb.shape[0] * nb,) + (B,) * ndim))
 
 
 def block_grid(shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE) -> tuple[int, ...]:
@@ -54,24 +72,30 @@ def block_grid(shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE) -> tu
 def scatter_blocks(blocks: np.ndarray, shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE) -> np.ndarray:
     """Inverse of gather_blocks. Overlapping faces are value-identical, so each
     block owns its half-open [0, stride)^ndim cells plus the global far faces."""
+    return scatter_blocks_batch(blocks, 1, shape_padded, stride)[0]
+
+
+def scatter_blocks_batch(blocks: np.ndarray, batch: int, shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """Batched inverse of gather_blocks_batch: (batch*nb, B..) -> (batch, *padded)."""
     ndim = len(shape_padded)
     nbs = block_grid(shape_padded, stride)
-    out = np.empty(shape_padded, dtype=blocks.dtype)
-    bl = blocks.reshape(nbs + (stride + 1,) * ndim)
+    out = np.empty((batch,) + shape_padded, dtype=blocks.dtype)
+    bl = blocks.reshape((batch,) + nbs + (stride + 1,) * ndim)
+    nil = (slice(None),)
     for far in itertools.product((False, True), repeat=ndim):
         # destination region: interior cells on non-far dims, last plane on far dims
         dst = tuple(slice(0, shape_padded[d] - 1) if not far[d] else slice(shape_padded[d] - 1, shape_padded[d]) for d in range(ndim))
         # source: all blocks/cells 0..stride-1 on non-far dims; last block, cell=stride on far dims
         src_blk = tuple(slice(None) if not far[d] else slice(nbs[d] - 1, nbs[d]) for d in range(ndim))
         src_cell = tuple(slice(0, stride) if not far[d] else slice(stride, stride + 1) for d in range(ndim))
-        sub = bl[src_blk + src_cell]  # (nb0',..,c0',..)
+        sub = bl[nil + src_blk + src_cell]  # (batch, nb0',.., c0',..)
         # interleave block/cell axes -> spatial
-        perm = []
+        perm = [0]
         for d in range(ndim):
-            perm += [d, ndim + d]
+            perm += [1 + d, 1 + ndim + d]
         sub = np.transpose(sub, perm)
-        new_shape = tuple(sub.shape[2 * d] * sub.shape[2 * d + 1] for d in range(ndim))
-        out[dst] = sub.reshape(new_shape)
+        new_shape = (batch,) + tuple(sub.shape[1 + 2 * d] * sub.shape[2 + 2 * d] for d in range(ndim))
+        out[nil + dst] = sub.reshape(new_shape)
     return out
 
 
@@ -81,8 +105,22 @@ def anchor_grid(xp: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
     return np.ascontiguousarray(xp[sl])
 
 
+def anchor_grid_batch(xpb: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
+    """Batched anchor_grid: (batch, *padded) -> (batch, *anchor_shape)."""
+    sl = (slice(None),) + tuple(slice(None, None, stride) for _ in range(xpb.ndim - 1))
+    return np.ascontiguousarray(xpb[sl])
+
+
 def place_anchors(shape_padded: tuple[int, ...], anchors: np.ndarray, stride: int = ANCHOR_STRIDE, dtype=np.float32) -> np.ndarray:
     out = np.zeros(shape_padded, dtype=dtype)
     sl = tuple(slice(None, None, stride) for _ in range(len(shape_padded)))
+    out[sl] = anchors
+    return out
+
+
+def place_anchors_batch(shape_padded: tuple[int, ...], anchors: np.ndarray, stride: int = ANCHOR_STRIDE, dtype=np.float32) -> np.ndarray:
+    """Batched place_anchors; `anchors` is (batch, *anchor_shape)."""
+    out = np.zeros((anchors.shape[0],) + shape_padded, dtype=dtype)
+    sl = (slice(None),) + tuple(slice(None, None, stride) for _ in range(len(shape_padded)))
     out[sl] = anchors
     return out

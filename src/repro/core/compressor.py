@@ -7,6 +7,24 @@ outliers.  decompress() replays the identical arithmetic from the codes.
 
 Error-bound contract: ||x - decompress(compress(x))||_inf <= eb_abs,
 where eb_abs = eb * value_range(x) in the paper's default "rel" mode.
+
+Hot-path architecture: the whole compressor is *batched end-to-end*. Fields
+with leading batch dimensions are folded to (batch, spatial<=3) once;
+padding, block gather/scatter, the level reorder (cached permutation
+gathers), anchor extraction and outlier collection are all single
+vectorized numpy ops over the batch axis, the predictor runs as ONE jitted
+device call over the concatenated block axis, and the quantization codes of
+the whole batch are emitted as ONE code sequence into a single
+``pipelines.encode`` call — no per-item Python loops, one host<->device
+round-trip per field.
+
+The predictor backend is selected by ``CompressorSpec.backend``:
+``"jax"`` (default) uses the pure-jnp engine in repro.core.predictor;
+``"pallas"`` routes compression through the fused Pallas TPU kernel in
+repro.kernels.interp3d (interpret mode off-TPU, compiled on TPU; 3-D
+fields only — other ranks fall back to jax). Decompression always replays
+through the jax engine; both backends quantize with the same arithmetic,
+so the error-bound contract holds either way.
 """
 from __future__ import annotations
 
@@ -22,7 +40,7 @@ from .autotune import autotune
 from .lossless import pipelines
 from .lossless.flenc import fl_decode, fl_encode
 from .predictor import compress_blocks, decompress_blocks
-from .reorder import flat_permutation, level_permutation, reorder_codes, restore_codes
+from .reorder import reorder_codes_batch, restore_codes_batch
 from .stencils import build_steps
 
 MAGIC = b"CSZH1\n"
@@ -39,6 +57,7 @@ class CompressorSpec:
     splines: tuple = ("cubic", "cubic", "cubic", "cubic")
     schemes: tuple = ("md", "md", "md", "md")
     reorder: bool = True
+    backend: str = "jax"                  # jax | pallas (fused interp3d kernel)
 
     @property
     def levels(self) -> tuple:
@@ -109,43 +128,43 @@ class Compressor:
             return self._compress_offset1d(x, eb_abs, base_hdr)
         raise ValueError(sp.predictor)
 
+    def _run_predictor(self, blocks: np.ndarray, eb_abs: float, steps, stride: int, ndim: int):
+        """Dispatch the fused predict+quantize over the whole block batch."""
+        if self.spec.backend == "pallas" and ndim == 3:
+            from repro.kernels.interp3d import compress_blocks_pallas
+
+            codes_b, outl_b, _ = compress_blocks_pallas(blocks, 2.0 * eb_abs, steps, stride)
+            return codes_b, outl_b
+        codes_b, outl_b, _ = compress_blocks(jnp.asarray(blocks), jnp.float32(2.0 * eb_abs), steps, stride)
+        return np.asarray(codes_b), np.asarray(outl_b)
+
     def _compress_interp(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
         sp = self.spec
         xb, spatial = self._spatial_view(x)
         ndim = len(spatial)
+        batch = xb.shape[0]
         stride = sp.anchor_stride
-        twoeb = jnp.float32(2.0 * eb_abs)
-        padded = [blk.pad_field(xb[i], blk.ANCHOR_STRIDE) for i in range(xb.shape[0])]
-        padded_shapes = padded[0].shape
-        blocks = np.concatenate([blk.gather_blocks(p, blk.ANCHOR_STRIDE) for p in padded], axis=0)
-        nb_per = blocks.shape[0] // xb.shape[0]
+        padded = blk.pad_field_batch(xb, blk.ANCHOR_STRIDE)
+        padded_shapes = padded.shape[1:]
+        blocks = blk.gather_blocks_batch(padded, blk.ANCHOR_STRIDE)
         if sp.autotune:
             splines, schemes = autotune(blocks, 2.0 * eb_abs, sp.levels, stride)
         else:
             splines, schemes = tuple(sp.splines[: len(sp.levels)]), tuple(sp.schemes[: len(sp.levels)])
         steps = build_steps(ndim, blk.BLOCK, sp.levels, splines, schemes)
-        codes_b, outl_b, _ = compress_blocks(jnp.asarray(blocks), twoeb, steps, stride)
-        codes_b, outl_b = np.asarray(codes_b), np.asarray(outl_b)
-        seqs, anchors, o_idx, o_val = [], [], [], []
-        psize = int(np.prod(padded_shapes))
-        for i in range(xb.shape[0]):
-            cgrid = blk.scatter_blocks(codes_b[i * nb_per : (i + 1) * nb_per], padded_shapes, blk.ANCHOR_STRIDE)
-            ogrid = blk.scatter_blocks(outl_b[i * nb_per : (i + 1) * nb_per], padded_shapes, blk.ANCHOR_STRIDE)
-            seqs.append(reorder_codes(cgrid, stride, sp.reorder))
-            anchors.append(blk.anchor_grid(padded[i], stride))
-            fi = np.flatnonzero(ogrid.reshape(-1))
-            o_idx.append(fi + i * psize)
-            o_val.append(padded[i].reshape(-1)[fi])
-        seq = np.concatenate(seqs)
+        codes_b, outl_b = self._run_predictor(blocks, eb_abs, steps, stride, ndim)
+        cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+        ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+        seq = reorder_codes_batch(cgrid, stride, sp.reorder)
+        anc = blk.anchor_grid_batch(padded, stride).astype(np.float32, copy=False)
+        oi = np.flatnonzero(ogrid.reshape(-1)).astype(np.int64)  # already batch-global
+        ov = padded.reshape(-1)[oi].astype(np.float32, copy=False)
         payload = pipelines.encode(seq, sp.pipeline)
-        anc = np.concatenate([a.reshape(-1) for a in anchors]).astype(np.float32)
-        oi = np.concatenate(o_idx).astype(np.int64)
-        ov = np.concatenate(o_val).astype(np.float32)
         header = dict(
             base_hdr,
             mode="interp",
             padded=list(padded_shapes),
-            batch=int(xb.shape[0]),
+            batch=int(batch),
             splines=list(splines),
             schemes=list(schemes),
             reorder=bool(sp.reorder),
@@ -200,32 +219,22 @@ class Compressor:
         oi = np.frombuffer(sections[2], np.int64)
         ov = np.frombuffer(sections[3], np.float32)
         psize = int(np.prod(padded_shapes))
-        perm, _ = level_permutation(padded_shapes, stride)
-        npts = perm.size
         anc_shape = tuple((d - 1) // stride + 1 for d in padded_shapes)
-        anc_per = int(np.prod(anc_shape))
         steps = build_steps(ndim, blk.BLOCK, tuple(CompressorSpec(anchor_stride=stride).levels), tuple(header["splines"]), tuple(header["schemes"]))
-        outs = []
-        for i in range(batch):
-            cgrid = restore_codes(seq[i * npts : (i + 1) * npts], padded_shapes, fill=128, dtype=np.uint8,
-                                  stride=stride, reorder=header.get("reorder", True))
-            agrid = blk.place_anchors(padded_shapes, anc[i * anc_per : (i + 1) * anc_per].reshape(anc_shape), stride)
-            ovgrid = np.zeros(psize, np.float32)
-            sel = (oi >= i * psize) & (oi < (i + 1) * psize)
-            ovgrid[oi[sel] - i * psize] = ov[sel]
-            ovgrid = ovgrid.reshape(padded_shapes)
-            cb = blk.gather_blocks(cgrid, blk.ANCHOR_STRIDE)
-            ab = blk.gather_blocks(agrid, blk.ANCHOR_STRIDE)
-            vb = blk.gather_blocks(ovgrid, blk.ANCHOR_STRIDE)
-            recon_b = np.asarray(decompress_blocks(jnp.asarray(cb), jnp.asarray(ab), jnp.asarray(vb), jnp.float32(2.0 * eb_abs), steps, stride))
-            recon = blk.scatter_blocks(recon_b, padded_shapes, blk.ANCHOR_STRIDE)
-            outs.append(recon)
-        out = np.stack(outs)
-        nd = len(padded_shapes)
-        spatial = shape[len(shape) - nd :] if len(shape) >= nd else shape
+        cgrid = restore_codes_batch(seq, batch, padded_shapes, fill=128, dtype=np.uint8,
+                                    stride=stride, reorder=header.get("reorder", True))
+        agrid = blk.place_anchors_batch(padded_shapes, anc.reshape((batch,) + anc_shape), stride)
+        ovflat = np.zeros(batch * psize, np.float32)
+        ovflat[oi] = ov  # outlier indices are batch-global
+        ovgrid = ovflat.reshape((batch,) + padded_shapes)
+        cb = blk.gather_blocks_batch(cgrid, blk.ANCHOR_STRIDE)
+        ab = blk.gather_blocks_batch(agrid, blk.ANCHOR_STRIDE)
+        vb = blk.gather_blocks_batch(ovgrid, blk.ANCHOR_STRIDE)
+        recon_b = np.asarray(decompress_blocks(jnp.asarray(cb), jnp.asarray(ab), jnp.asarray(vb), jnp.float32(2.0 * eb_abs), steps, stride))
+        out = blk.scatter_blocks_batch(recon_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+        spatial = shape[len(shape) - ndim :] if len(shape) >= ndim else shape
         sl = (slice(None),) + tuple(slice(0, s) for s in spatial)
-        out = out[sl]
-        return out.reshape(shape)
+        return out[sl].reshape(shape)
 
     def _decompress_lorenzo(self, header, sections, shape) -> np.ndarray:
         seq = pipelines.decode(sections[0])

@@ -42,9 +42,16 @@ def _encode_stage(name: str, data: np.ndarray):
     if name == "bit1":
         return _bit.bitshuffle_encode(data)
     if name == "zstd":
-        import zstandard
+        # zstandard is an optional dependency: fall back to stdlib zlib and
+        # record the codec actually used so decode dispatches correctly
+        try:
+            import zstandard
 
-        return zstandard.ZstdCompressor(level=6).compress(data.tobytes()), {}
+            return zstandard.ZstdCompressor(level=6).compress(data.tobytes()), {"c": "zstd"}
+        except ImportError:
+            import zlib
+
+            return zlib.compress(data.tobytes(), 6), {"c": "zlib"}
     raise ValueError(f"unknown stage {name!r}")
 
 
@@ -60,8 +67,16 @@ def _decode_stage(name: str, payload: bytes, header: dict) -> np.ndarray:
     if name == "bit1":
         return _bit.bitshuffle_decode(payload, header)
     if name == "zstd":
-        import zstandard
+        if header.get("c", "zstd") == "zlib":
+            import zlib
 
+            return np.frombuffer(zlib.decompress(payload), np.uint8)
+        try:
+            import zstandard
+        except ImportError as e:
+            raise ImportError(
+                "this stream was compressed with the optional 'zstandard' package; install it to decode"
+            ) from e
         return np.frombuffer(zstandard.ZstdDecompressor().decompress(payload), np.uint8)
     raise ValueError(f"unknown stage {name!r}")
 

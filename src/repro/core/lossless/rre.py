@@ -46,25 +46,39 @@ def _pack_kbytes(data: np.ndarray, k: int):
 
 
 def _serialize(top, levels, sizes, kept: np.ndarray, n_orig: int, k: int, nsym: int):
-    header = {
-        "n": int(n_orig),
-        "k": int(k),
-        "nsym": int(nsym),
-        "top": top.tobytes().hex(),
-        "sizes": [int(s) for s in sizes],
-        "lvl_sizes": [int(l.size) for l in levels],
-    }
-    payload = b"".join([l.tobytes() for l in levels] + [kept.tobytes()])
+    """Compact binary layout: the recursive-bitmap metadata (top bytes +
+    per-level sizes) rides inside the payload, keeping the JSON header to
+    three integers.
+
+    payload = [u16 top_len][u16 n_levels][u64 sizes...][u64 lvl_sizes...]
+              [top][levels...][kept]
+    """
+    header = {"n": int(n_orig), "k": int(k), "nsym": int(nsym)}
+    meta = (
+        np.asarray([top.size, len(levels)], "<u2").tobytes()
+        + np.asarray(list(sizes) + [l.size for l in levels], "<u8").tobytes()
+    )
+    payload = b"".join([meta, top.tobytes()] + [l.tobytes() for l in levels] + [kept.tobytes()])
     return payload, header
 
 
 def _deserialize(payload: bytes, header: dict):
-    top = np.frombuffer(bytes.fromhex(header["top"]), np.uint8)
-    sizes = header["sizes"]
-    off = 0
-    levels = []
     buf = np.frombuffer(payload, np.uint8)
-    for ls in header["lvl_sizes"]:
+    if "top" in header:  # legacy hex-in-JSON header (seed containers)
+        top = np.frombuffer(bytes.fromhex(header["top"]), np.uint8)
+        sizes = header["sizes"]
+        lvl_sizes = header["lvl_sizes"]
+        off = 0
+    else:
+        top_len, n_levels = np.frombuffer(payload[:4], "<u2")
+        off = 4 + 8 * (2 * int(n_levels))
+        szs = np.frombuffer(payload[4:off], "<u8")
+        sizes = [int(s) for s in szs[: int(n_levels)]]
+        lvl_sizes = [int(s) for s in szs[int(n_levels) :]]
+        top = buf[off : off + int(top_len)]
+        off += int(top_len)
+    levels = []
+    for ls in lvl_sizes:
         levels.append(buf[off : off + ls])
         off += ls
     kept = buf[off:]

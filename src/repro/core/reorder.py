@@ -62,3 +62,22 @@ def restore_codes(seq: np.ndarray, shape: tuple[int, ...], fill, dtype, stride: 
     out = np.full(int(np.prod(shape)), fill, dtype=dtype)
     out[perm] = seq
     return out.reshape(shape)
+
+
+def reorder_codes_batch(grids: np.ndarray, stride: int = ANCHOR_STRIDE, reorder: bool = True) -> np.ndarray:
+    """Batched reorder: (batch, *shape) -> concatenated per-item sequences.
+
+    One cached-permutation gather across the whole batch; identical to
+    concatenating per-item reorder_codes results.
+    """
+    shape = grids.shape[1:]
+    perm = level_permutation(shape, stride)[0] if reorder else flat_permutation(shape, stride)
+    return grids.reshape(grids.shape[0], -1)[:, perm].reshape(-1)
+
+
+def restore_codes_batch(seq: np.ndarray, batch: int, shape: tuple[int, ...], fill, dtype, stride: int = ANCHOR_STRIDE, reorder: bool = True) -> np.ndarray:
+    """Batched inverse of reorder_codes_batch -> (batch, *shape) grids."""
+    perm = level_permutation(shape, stride)[0] if reorder else flat_permutation(shape, stride)
+    out = np.full((batch, int(np.prod(shape))), fill, dtype=dtype)
+    out[:, perm] = seq.reshape(batch, perm.size)
+    return out.reshape((batch,) + shape)

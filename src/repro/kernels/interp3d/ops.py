@@ -1,17 +1,31 @@
-"""Jitted host-facing wrapper for the interp3d Pallas kernel."""
+"""Jitted host-facing wrapper for the interp3d Pallas kernel.
+
+This is the ``backend="pallas"`` entry point used by
+``repro.core.compressor.Compressor``: interpret mode is auto-selected (the
+kernel interprets on CPU/GPU hosts and compiles on TPU), so the same spec
+flag works across environments.
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .interp3d import LANES, interp3d_compress
 
 
-def compress_blocks_pallas(blocks: np.ndarray, twoeb: float, steps, anchor_every: int = 16, interpret: bool = True):
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def compress_blocks_pallas(blocks: np.ndarray, twoeb: float, steps, anchor_every: int = 16, interpret: bool | None = None):
     """Drop-in for repro.core.predictor.compress_blocks, routed through Pallas.
 
     blocks: (nb, B, B, B) f32 -> (codes u8, outlier bool, recon f32), (nb, B, B, B).
+    interpret=None auto-selects: compiled on TPU, interpreter elsewhere.
     """
+    if interpret is None:
+        interpret = _default_interpret()
     nb = blocks.shape[0]
     pad = (-nb) % LANES
     if pad:

@@ -379,18 +379,11 @@ def moe_ffn(x, p, cfg: ModelConfig):
     mesh = part.get_mesh()
     if mesh is None:
         return _moe_local(x, p, cfg, None)
-    # nested-manual support: inside a Manual('pod') region (compressed
-    # cross-pod train step) the inner shard_map must use the context mesh
-    # and only manage the remaining axes
-    try:
-        ctx = jax.sharding.get_abstract_mesh()
-        if ctx is not None and not ctx.empty and any(t == jax.sharding.AxisType.Manual for t in ctx.axis_types):
-            # inside a Manual region (compressed cross-pod step): XLA's SPMD
-            # partitioner cannot nest another shard_map here (CHECK failure);
-            # fall back to GSPMD-auto dispatch
-            return _moe_local(x, p, cfg, None)
-    except Exception:  # pragma: no cover - context probing best-effort
-        pass
+    # inside a Manual('pod') region (compressed cross-pod train step) XLA's
+    # SPMD partitioner cannot nest another shard_map (CHECK failure); fall
+    # back to GSPMD-auto dispatch
+    if part.in_manual_region():
+        return _moe_local(x, p, cfg, None)
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     model_axis = "model" if "model" in mesh.shape else None
     x_spec = P(dp_axes if x.shape[0] % math.prod(mesh.shape[a] for a in dp_axes) == 0 else None, None, None)
@@ -427,11 +420,10 @@ def moe_ffn(x, p, cfg: ModelConfig):
         aux = jax.lax.pmean(aux, dp_axes + ((model_axis,) if model_axis else ()))
         return y, aux
 
-    y, aux = jax.shard_map(
+    y, aux = part.shard_map(
         body,
         mesh=mesh,
         in_specs=(x_spec, w_specs),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, {k: p[k] for k in w_specs})
     return y, aux

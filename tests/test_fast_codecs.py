@@ -1,0 +1,182 @@
+"""Equivalence tests for the vectorized hot path.
+
+The word-packed Huffman encoder must produce the exact bit layout of the
+reference per-bit packer (the seed implementation, kept here as the oracle),
+and the batched block/reorder kernels must match their per-item references.
+"""
+import numpy as np
+import pytest
+
+from repro.core import blocks as blk
+from repro.core import reorder as ro
+from repro.core.lossless import huffman as hf
+
+
+def _streams():
+    rng = np.random.default_rng(0)
+    yield "random", rng.integers(0, 256, 5000, dtype=np.uint8)
+    yield "skewed", np.minimum(rng.zipf(1.5, 5000), 255).astype(np.uint8)
+    yield "runs", np.repeat(rng.integers(0, 4, 100, dtype=np.uint8), 57)[:5000]
+    yield "zeros", np.zeros(4096, np.uint8)
+    yield "halfchunk", np.zeros(512, np.uint8)
+    yield "tiny", np.array([128], np.uint8)
+    yield "empty", np.zeros(0, np.uint8)
+    yield "odd", rng.integers(0, 256, hf.CHUNK - 1, dtype=np.uint8)
+    yield "chunk+1", np.minimum(rng.zipf(1.5, hf.CHUNK + 1), 255).astype(np.uint8)
+    yield "deepskew", np.clip(rng.normal(128, 2.5, 1 << 18), 0, 255).astype(np.uint8)
+
+
+def _reference_bits(data: np.ndarray, chunk: int = hf.CHUNK, lens: np.ndarray | None = None):
+    """Seed-style per-bit chunked packer (the oracle for both the current and
+    the legacy chunked layouts). `lens` overrides the tree (legacy deep trees
+    exceed the current MAXLEN cap, so they cannot come from code_lengths)."""
+    data = np.ascontiguousarray(data, np.uint8)
+    n = data.size
+    if lens is None:
+        lens = hf.code_lengths(np.bincount(data, minlength=256))
+    codes, lens, *_ = hf.canonical_codes(lens)
+    sym_lens = lens[data].astype(np.int64)
+    nchunks = max(1, -(-n // chunk))
+    sl = np.zeros(nchunks * chunk, np.int64)
+    sl[:n] = sym_lens
+    within = sl.reshape(nchunks, chunk)
+    chunk_bytes = (within.sum(1) + 7) >> 3
+    off = np.zeros(nchunks + 1, np.int64)
+    np.cumsum(chunk_bytes, out=off[1:])
+    out_bits = np.zeros(int(off[-1]) * 8, np.uint8)
+    start = np.cumsum(within, 1) - within
+    bitpos = (off[:-1, None] * 8 + start).reshape(-1)[:n]
+    cw = codes[data].astype(np.int64)
+    L = sym_lens
+    reps = np.repeat(np.arange(n), L)
+    j = np.arange(int(L.sum())) - np.repeat(np.cumsum(L) - L, L)
+    out_bits[bitpos[reps] + j] = (cw[reps] >> (L[reps] - 1 - j)) & 1
+    return np.packbits(out_bits).tobytes(), chunk_bytes, lens
+
+
+@pytest.mark.parametrize("name,data", list(_streams()))
+def test_huffman_bitstream_matches_reference(name, data):
+    payload, hdr = hf.encode(data)
+    ref_bits, ref_chunk_bytes, _ = _reference_bits(data)
+    nchunks = max(1, -(-data.size // hf.CHUNK))
+    blob = 256 + 2 * nchunks
+    got = np.frombuffer(payload[blob:], np.uint8)
+    assert np.array_equal(
+        np.frombuffer(payload[256:blob], "<u2").astype(np.int64), ref_chunk_bytes
+    ), name
+    assert got.tobytes() == ref_bits, name
+    assert np.array_equal(hf.decode(payload, hdr), data), name
+
+
+def _deep_lens() -> np.ndarray:
+    """A complete 24-deep tree (legacy MAXLEN): lengths 1..23 + two 24s."""
+    lens = np.zeros(256, np.uint8)
+    lens[:23] = np.arange(1, 24)
+    lens[23:25] = 24
+    return lens
+
+
+def _legacy_cases():
+    rng = np.random.default_rng(0)
+    for name, data in _streams():
+        if data.size:
+            yield name, data, None
+    # deep-tree stream: codes up to 24 bits, beyond the current MAXLEN cap
+    deep = np.minimum(rng.geometric(0.5, 20000) - 1, 24).astype(np.uint8)
+    yield "deeptree", deep, _deep_lens()
+
+
+@pytest.mark.parametrize("name,data,lens", list(_legacy_cases()))
+def test_huffman_legacy_header_decodes(name, data, lens):
+    """Containers written by the seed (hex headers, 4096-chunks, <=24-bit
+    codes) must keep decoding through the fast path's legacy branch."""
+    bits, chunk_bytes, lens = _reference_bits(data, hf._LEGACY_CHUNK, lens)
+    header = {
+        "n": int(data.size),
+        "lens": lens.tobytes().hex(),
+        "chunk_bytes": np.asarray(chunk_bytes, np.uint32).tobytes().hex(),
+    }
+    assert np.array_equal(hf.decode(bits, header), data), name
+
+
+def test_huffman_decode_grouping_matches(monkeypatch):
+    """Payloads beyond the u32 bit-cursor range decode in rebased chunk
+    groups; shrinking the group size must not change the output."""
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 256, (1 << 18) + 321, dtype=np.uint8)
+    payload, hdr = hf.encode(data)
+    ref = hf.decode(payload, hdr)
+    monkeypatch.setattr(hf, "_DECODE_GROUP_BYTES", 1 << 14)  # force many groups
+    assert np.array_equal(hf.decode(payload, hdr), ref)
+    assert np.array_equal(ref, data)
+
+
+def test_huffman_threaded_matches_single():
+    """Slab-parallel encode must be byte-identical to the single-slab path."""
+    rng = np.random.default_rng(3)
+    data = np.minimum(rng.zipf(1.3, (1 << 21) + 137), 255).astype(np.uint8)
+    payload, hdr = hf.encode(data)
+    tbl_lens = np.frombuffer(payload[:256], np.uint8)
+    codes, lens, *_ = hf.canonical_codes(tbl_lens.copy())
+    tbl = (lens.astype(np.uint32) << hf._U16) | codes
+    step = 1 << 20  # any CHUNK-aligned split must give identical bytes
+    bits_single = b"".join(
+        hf._encode_slab(data[i : i + step], tbl)[0] for i in range(0, data.size, step)
+    )
+    nchunks = -(-data.size // hf.CHUNK)
+    assert payload[256 + 2 * nchunks :] == bits_single
+    assert np.array_equal(hf.decode(payload, hdr), data)
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+@pytest.mark.parametrize("shape", [(24, 20, 28), (33, 17), (40,)])
+def test_batched_blocks_match_per_item(batch, shape):
+    rng = np.random.default_rng(batch)
+    xb = rng.standard_normal((batch,) + shape).astype(np.float32)
+    padded_b = blk.pad_field_batch(xb)
+    blocks_b = blk.gather_blocks_batch(padded_b)
+    per_item = [blk.pad_field(xb[i]) for i in range(batch)]
+    assert np.array_equal(padded_b, np.stack(per_item))
+    ref_blocks = np.concatenate([blk.gather_blocks(p) for p in per_item], axis=0)
+    assert np.array_equal(blocks_b, ref_blocks)
+    # scatter inverts gather, batched
+    back = blk.scatter_blocks_batch(blocks_b, batch, padded_b.shape[1:])
+    assert np.array_equal(back, padded_b)
+    # anchors
+    anc_b = blk.anchor_grid_batch(padded_b)
+    assert np.array_equal(anc_b, np.stack([blk.anchor_grid(p) for p in per_item]))
+    placed = blk.place_anchors_batch(padded_b.shape[1:], anc_b)
+    assert np.array_equal(placed[0], blk.place_anchors(padded_b.shape[1:], anc_b[0]))
+
+
+@pytest.mark.parametrize("reorder", [True, False])
+def test_batched_reorder_matches_per_item(reorder):
+    rng = np.random.default_rng(0)
+    grids = rng.integers(0, 256, (3, 33, 33), dtype=np.uint8)
+    seq = ro.reorder_codes_batch(grids, 16, reorder)
+    ref = np.concatenate([ro.reorder_codes(grids[i], 16, reorder) for i in range(3)])
+    assert np.array_equal(seq, ref)
+    back = ro.restore_codes_batch(seq, 3, grids.shape[1:], fill=128, dtype=np.uint8, reorder=reorder)
+    ref_back = np.stack(
+        [ro.restore_codes(ref[i * (ref.size // 3) : (i + 1) * (ref.size // 3)], grids.shape[1:], 128, np.uint8, reorder=reorder) for i in range(3)]
+    )
+    assert np.array_equal(back, ref_back)
+
+
+def test_batched_compressor_roundtrip_and_cr():
+    """End-to-end: the batched plan roundtrips a multi-field batch within the
+    bound and compresses no worse than fields stored separately."""
+    from repro.core import Compressor, CompressorSpec, max_abs_err
+
+    rng = np.random.default_rng(7)
+    g = np.stack(np.meshgrid(*[np.linspace(0, 3, 24)] * 3, indexing="ij"))
+    base = np.sin(g[0] * 2.1) * np.cos(g[1] * 1.7) + 0.5 * np.sin(g[2] * 3.3)
+    xb = np.stack([base + 0.05 * rng.standard_normal(base.shape) for _ in range(4)]).astype(np.float32)
+    c = Compressor(CompressorSpec(eb=1e-2, pipeline="cr", autotune=False))
+    buf = c.compress(xb)
+    out = c.decompress(buf)
+    rngv = float(xb.max() - xb.min())
+    assert out.shape == xb.shape
+    assert max_abs_err(xb, out) <= 1e-2 * rngv * (1 + 1e-5)
+    per_item = sum(len(c.compress(xb[i])) for i in range(xb.shape[0]))
+    assert len(buf) <= per_item

@@ -1,5 +1,8 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from hypothesis.extra import numpy as hnp
