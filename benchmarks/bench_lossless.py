@@ -3,10 +3,14 @@
     PYTHONPATH=src python -m benchmarks.bench_lossless [--out BENCH_lossless.json]
 
 Measures each lossless stage on a 4 MiB quantization-code-like stream (the
-codec's actual workload: Laplacian codes centered on 128) plus the
-end-to-end compressor on a 64^3 smooth float32 field (after JIT warmup).
-Each timing is the best of ``--reps`` runs (timeit-style min-time, which
-rejects scheduler noise on shared hosts); the JSON records the rep count.
+codec's actual workload: Laplacian codes centered on 128), sweeps *every
+registered pipeline* plus the orchestrated ``auto`` mode over a synthetic
+field suite (each row carries a ``pipeline`` dimension with CR + MB/s),
+and times the end-to-end compressor on a 64^3 smooth float32 field (after
+JIT warmup). Each timing is the best of ``--reps`` runs (timeit-style
+min-time, which rejects scheduler noise on shared hosts); the JSON records
+the rep count and, per stream, how auto's CR compares to the best fixed
+pipeline.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ import numpy as np
 from repro.core import compression_ratio, cusz_hi_cr, max_abs_err
 from repro.core.lossless import bitshuffle as bs
 from repro.core.lossless import huffman as hf
+from repro.core.lossless import orchestrate as orc
 from repro.core.lossless import pipelines as pp
 from repro.core.lossless import rre, tcms
 
@@ -61,6 +66,57 @@ def bench_stage(name, enc, dec, data, reps) -> dict:
     }
 
 
+def synthetic_streams(nbytes: int = STREAM_BYTES) -> dict:
+    """The synthetic field suite: code-stream laws the orchestrator must span."""
+    rng = np.random.default_rng(7)
+    return {
+        "laplace8": quant_code_stream(nbytes, scale=8.0),
+        "laplace1": quant_code_stream(nbytes, scale=1.0),
+        "runs": np.repeat(rng.integers(126, 131, nbytes // 64, dtype=np.uint8), 64)[:nbytes],
+        "sparse": np.where(rng.random(nbytes) < 0.02, rng.integers(0, 256, nbytes), 128).astype(np.uint8),
+        "random": rng.integers(0, 256, nbytes, dtype=np.uint8),
+    }
+
+
+def sweep_pipelines(data: np.ndarray, stream: str, reps: int) -> list[dict]:
+    """All registered pipelines + auto on one stream; pipeline dimension rows."""
+    rows = []
+    for pipe in sorted(pp.PIPELINES):
+        buf = pp.encode(data, pipe)
+        assert np.array_equal(pp.decode(buf), data)
+        te = _best(lambda: pp.encode(data, pipe), reps)
+        td = _best(lambda: pp.decode(buf), reps)
+        rows.append(
+            {
+                "stage": f"pipeline:{pipe}",
+                "pipeline": pipe,
+                "stream": stream,
+                "enc_mbps": data.size / te / 1e6,
+                "dec_mbps": data.size / td / 1e6,
+                "cr": data.size / len(buf),
+            }
+        )
+    buf, record = orc.encode_auto(data)
+    assert np.array_equal(pp.decode(buf), data)
+    te = _best(lambda: orc.encode_auto(data), reps)
+    td = _best(lambda: pp.decode(buf), reps)
+    best_fixed = max(r["cr"] for r in rows)
+    cr_auto = data.size / len(buf)
+    rows.append(
+        {
+            "stage": "pipeline:auto",
+            "pipeline": "auto",
+            "stream": stream,
+            "picked": record["pipeline"],
+            "enc_mbps": data.size / te / 1e6,
+            "dec_mbps": data.size / td / 1e6,
+            "cr": cr_auto,
+            "cr_vs_best_fixed": cr_auto / best_fixed,
+        }
+    )
+    return rows
+
+
 def run(reps: int = 5) -> dict:
     data = quant_code_stream()
     rows = [
@@ -70,19 +126,8 @@ def run(reps: int = 5) -> dict:
         bench_stage("tcms8", lambda d: tcms.tcms_encode(d, 8), tcms.tcms_decode, data, reps),
         bench_stage("bit1", bs.bitshuffle_encode, bs.bitshuffle_decode, data, reps),
     ]
-    for pipe in ("cr", "tp"):
-        buf = pp.encode(data, pipe)
-        assert np.array_equal(pp.decode(buf), data)
-        te = _best(lambda: pp.encode(data, pipe), reps)
-        td = _best(lambda: pp.decode(buf), reps)
-        rows.append(
-            {
-                "stage": f"pipeline:{pipe}",
-                "enc_mbps": data.size / te / 1e6,
-                "dec_mbps": data.size / td / 1e6,
-                "cr": data.size / len(buf),
-            }
-        )
+    for stream, sdata in synthetic_streams().items():
+        rows.extend(sweep_pipelines(sdata, stream, reps))
     # end-to-end compressor on a smooth field, warmed up (JIT + caches)
     x = smooth_field()
     comp = cusz_hi_cr(eb=1e-3)
@@ -120,8 +165,10 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for r in result["stages"]:
+        tag = r["stage"] + (f"[{r['stream']}]" if "stream" in r else "")
+        picked = f"  -> {r['picked']}" if "picked" in r else ""
         print(
-            f"{r['stage']:16s} enc {r['enc_mbps']:8.1f} MB/s   dec {r['dec_mbps']:8.1f} MB/s   CR {r['cr']:.2f}"
+            f"{tag:28s} enc {r['enc_mbps']:8.1f} MB/s   dec {r['dec_mbps']:8.1f} MB/s   CR {r['cr']:8.2f}{picked}"
         )
     print(f"-> {args.out}")
 

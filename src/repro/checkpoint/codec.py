@@ -5,10 +5,15 @@ Two modes per tensor:
     anything integer/small) — falls back to stdlib zlib when the optional
     ``zstandard`` package is absent, and records which codec was used in
     the manifest so restore dispatches correctly;
-  * error-bounded: the paper's full pipeline (interp predictor + CR
-    pipeline) on float tensors reshaped to a 2-D field — weights are not
-    spatially smooth like simulation data, so the autotuner typically picks
-    linear splines; CR is reported honestly in the manifest.
+  * error-bounded: the paper's full pipeline (interp predictor +
+    orchestrated ``pipeline="auto"`` lossless stack) on float tensors
+    reshaped to a 2-D field — weights are not spatially smooth like
+    simulation data, so the orchestrator picks the best-fit registered
+    pipeline per tensor; CR is reported honestly in the manifest.
+
+The pipeline name used at encode time is recorded in the tensor meta and
+decode dispatches from it, so checkpoints written under an older default
+(e.g. the previous hardcoded "tp") keep restoring after a default change.
 """
 from __future__ import annotations
 
@@ -22,9 +27,12 @@ except ImportError:  # pragma: no cover - depends on the environment
     zstandard = None
 
 from repro.core import Compressor, CompressorSpec
+from repro.core.lossless import portable_pipelines
 
 _ZSTD_LEVEL = 3
 _ZLIB_LEVEL = 6
+_EB_PIPELINE = "auto"  # orchestrated per-tensor pipeline selection
+_LEGACY_EB_PIPELINE = "tp"  # checkpoints written before meta recorded the name
 
 
 def _as_field(x: np.ndarray) -> np.ndarray:
@@ -43,10 +51,13 @@ def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
     """eb = 0 -> lossless; eb > 0 -> value-range-relative error bound."""
     meta = {"shape": list(x.shape), "dtype": str(x.dtype)}
     if eb > 0 and x.dtype in (np.float32, np.float64) and x.size >= 4096:
-        comp = Compressor(CompressorSpec(eb=eb, pipeline="tp", autotune=False))
+        # portable candidates only: a checkpoint must restore on machines
+        # without the optional codecs installed here (e.g. zstandard)
+        comp = Compressor(CompressorSpec(eb=eb, pipeline=_EB_PIPELINE, autotune=False,
+                                         pipeline_candidates=tuple(portable_pipelines())))
         field = _as_field(x.astype(np.float32))
         payload = comp.compress(field)
-        meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape))
+        meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape), pipeline=_EB_PIPELINE)
         return payload, meta
     raw = np.ascontiguousarray(x).tobytes()
     if zstandard is not None:
@@ -60,7 +71,8 @@ def decode_tensor(payload: bytes, meta: dict) -> np.ndarray:
     shape = tuple(meta["shape"])
     dtype = np.dtype(meta["dtype"])
     if meta["mode"] == "cuszhi":
-        comp = Compressor(CompressorSpec(eb=meta["eb"], pipeline="tp", autotune=False))
+        pipeline = meta.get("pipeline", _LEGACY_EB_PIPELINE)
+        comp = Compressor(CompressorSpec(eb=meta["eb"], pipeline=pipeline, autotune=False))
         field = comp.decompress(payload)
         return field.reshape(-1)[: int(np.prod(shape))].reshape(shape).astype(dtype)
     if meta["mode"] == "zlib":

@@ -2,6 +2,7 @@
 from .compressor import (  # noqa: F401
     Compressor,
     CompressorSpec,
+    cusz_hi_auto,
     cusz_hi_cr,
     cusz_hi_crz,
     cusz_hi_tp,

@@ -2,8 +2,25 @@
 
 compress():  pad -> [autotune] -> interpolation predict+quantize (blocks,
 jit/Pallas) -> scatter codes -> level-reorder (Eq.3) -> lossless pipeline
-(CR: hf-rre4-tcms8-rze1 / TP: tcms1-bit1-rre1) -> container with anchors +
-outliers.  decompress() replays the identical arithmetic from the codes.
+-> container with anchors + outliers.  decompress() replays the identical
+arithmetic from the codes.
+
+The lossless seam rides the stage registry (repro.core.lossless.stages /
+pipelines): ``CompressorSpec.pipeline`` names any registered pipeline
+(CR: hf-rre4-tcms8-rze1 / TP: tcms1-bit1-rre1 / ...), and ``"auto"``
+invokes the orchestrator (repro.core.lossless.orchestrate), which samples
+the quantization-code stream, scores every registered pipeline with the
+stage cost hooks plus a trial encode, and picks the best fit per field.
+The chosen pipeline name and the sampled statistics are recorded in the
+container header, so decompression never re-infers anything.
+
+Container format v2 (binary): ``CSZH2\\n`` magic, u32 header length, a
+compact binary header (repro.core.serial), then a section table — u32
+section count + u64 sizes — followed by the section bytes. Containers
+written by earlier checkouts (``CSZH1\\n`` magic + JSON header, JSON-meta
+lossless streams) still decompress bit-exactly through the v1 read path.
+Spec validation happens at construction: unknown pipeline/backend/
+predictor names raise immediately, listing the registered names.
 
 Error-bound contract: ||x - decompress(compress(x))||_inf <= eb_abs,
 where eb_abs = eb * value_range(x) in the paper's default "rel" mode.
@@ -30,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import struct
 
 import jax.numpy as jnp
 import numpy as np
@@ -37,13 +55,19 @@ import numpy as np
 from . import blocks as blk
 from . import lorenzo as lor
 from .autotune import autotune
-from .lossless import pipelines
+from .lossless import orchestrate, pipelines
 from .lossless.flenc import fl_decode, fl_encode
 from .predictor import compress_blocks, decompress_blocks
 from .reorder import reorder_codes_batch, restore_codes_batch
+from .serial import pack_obj, unpack_obj
 from .stencils import build_steps
 
-MAGIC = b"CSZH1\n"
+MAGIC_V1 = b"CSZH1\n"
+MAGIC = b"CSZH2\n"
+
+_PREDICTORS = ("interp", "lorenzo", "offset1d")
+_BACKENDS = ("jax", "pallas")
+_EB_MODES = ("rel", "abs")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,13 +75,32 @@ class CompressorSpec:
     eb: float = 1e-3
     eb_mode: str = "rel"                  # "rel": eb * value range (paper); "abs"
     predictor: str = "interp"             # interp | lorenzo | offset1d
-    pipeline: str = "cr"                  # cr | tp | hf | fz | none
+    pipeline: str = "cr"                  # any registered pipeline, or "auto"
     anchor_stride: int = 16               # 16 = cuSZ-Hi; 8 = cuSZ-I layout
     autotune: bool = True
     splines: tuple = ("cubic", "cubic", "cubic", "cubic")
     schemes: tuple = ("md", "md", "md", "md")
     reorder: bool = True
     backend: str = "jax"                  # jax | pallas (fused interp3d kernel)
+    # pipeline="auto" only: restrict the orchestrator's search space, e.g. to
+    # orchestrate.portable_pipelines() for artifacts that must restore on any
+    # machine. None = every registered pipeline.
+    pipeline_candidates: tuple | None = None
+
+    def __post_init__(self):
+        if self.pipeline != "auto" and self.pipeline not in pipelines.PIPELINES:
+            raise ValueError(
+                f"unknown pipeline {self.pipeline!r}; registered pipelines: "
+                f"{', '.join(sorted(pipelines.PIPELINES))} (or 'auto')"
+            )
+        for nm in self.pipeline_candidates or ():
+            pipelines.get_pipeline(nm)  # raises with the registered list
+        if self.predictor not in _PREDICTORS:
+            raise ValueError(f"unknown predictor {self.predictor!r}; one of {_PREDICTORS}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; one of {_BACKENDS}")
+        if self.eb_mode not in _EB_MODES:
+            raise ValueError(f"unknown eb_mode {self.eb_mode!r}; one of {_EB_MODES}")
 
     @property
     def levels(self) -> tuple:
@@ -69,23 +112,54 @@ class CompressorSpec:
 
 
 def _sections_pack(header: dict, sections: list[bytes]) -> bytes:
+    """Container v2: binary header + u32/u64 section table."""
+    hb = pack_obj(header)
+    out = bytearray(MAGIC)
+    out += struct.pack("<I", len(hb))
+    out += hb
+    out += struct.pack("<I", len(sections))
+    for s in sections:
+        out += struct.pack("<Q", len(s))
+    for s in sections:
+        out += s
+    return bytes(out)
+
+
+def _sections_pack_v1(header: dict, sections: list[bytes]) -> bytes:
+    """Legacy container writer (JSON header), kept for compat tests/tools."""
     header = dict(header, _sizes=[len(s) for s in sections])
     hj = json.dumps(header).encode()
-    return MAGIC + len(hj).to_bytes(8, "little") + hj + b"".join(sections)
+    return MAGIC_V1 + len(hj).to_bytes(8, "little") + hj + b"".join(sections)
 
 
 def _sections_unpack(buf: bytes):
-    assert buf[: len(MAGIC)] == MAGIC, "bad container magic"
-    off = len(MAGIC)
-    hlen = int.from_bytes(buf[off : off + 8], "little")
-    off += 8
-    header = json.loads(buf[off : off + hlen])
-    off += hlen
-    sections = []
-    for sz in header["_sizes"]:
-        sections.append(buf[off : off + sz])
-        off += sz
-    return header, sections
+    if buf[: len(MAGIC)] == MAGIC:  # v2: binary header + section table
+        off = len(MAGIC)
+        (hlen,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        header = unpack_obj(buf[off : off + hlen])
+        off += hlen
+        (nsec,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        sizes = struct.unpack_from(f"<{nsec}Q", buf, off)
+        off += 8 * nsec
+        sections = []
+        for sz in sizes:
+            sections.append(buf[off : off + sz])
+            off += sz
+        return header, sections
+    if buf[: len(MAGIC_V1)] == MAGIC_V1:  # v1: JSON header, sizes inline
+        off = len(MAGIC_V1)
+        hlen = int.from_bytes(buf[off : off + 8], "little")
+        off += 8
+        header = json.loads(buf[off : off + hlen])
+        off += hlen
+        sections = []
+        for sz in header["_sizes"]:
+            sections.append(buf[off : off + sz])
+            off += sz
+        return header, sections
+    raise ValueError(f"bad container magic {bytes(buf[:6])!r}; expected {MAGIC!r} or {MAGIC_V1!r}")
 
 
 class Compressor:
@@ -128,6 +202,36 @@ class Compressor:
             return self._compress_offset1d(x, eb_abs, base_hdr)
         raise ValueError(sp.predictor)
 
+    def _encode_codes(self, seq: np.ndarray) -> tuple[bytes, dict]:
+        """Lossless-encode the code stream; returns (payload, header fields).
+
+        ``pipeline="auto"`` routes through the orchestrator: the chosen
+        pipeline plus the sampled statistics land in the container header
+        (per field), so the selection is recorded, reproducible, and never
+        re-inferred at decode time.
+        """
+        sp = self.spec
+        if sp.pipeline != "auto":
+            return pipelines.encode(seq, sp.pipeline), {"pipeline": sp.pipeline}
+        histogram = None
+        if sp.backend == "pallas":
+            import jax
+
+            from repro.kernels.histogram import histogram256_pallas
+
+            interpret = jax.devices()[0].platform != "tpu"
+            histogram = lambda d: histogram256_pallas(d, interpret=interpret)  # noqa: E731
+        payload, record = orchestrate.encode_auto(
+            seq, candidates=sp.pipeline_candidates, histogram=histogram
+        )
+        return payload, {"pipeline": record["pipeline"], "pchoice": record}
+
+    @staticmethod
+    def inspect(buf: bytes) -> dict:
+        """Container header + section sizes, without decompressing."""
+        header, sections = _sections_unpack(buf)
+        return dict(header, section_bytes=[len(s) for s in sections])
+
     def _run_predictor(self, blocks: np.ndarray, eb_abs: float, steps, stride: int, ndim: int):
         """Dispatch the fused predict+quantize over the whole block batch."""
         if self.spec.backend == "pallas" and ndim == 3:
@@ -159,7 +263,7 @@ class Compressor:
         anc = blk.anchor_grid_batch(padded, stride).astype(np.float32, copy=False)
         oi = np.flatnonzero(ogrid.reshape(-1)).astype(np.int64)  # already batch-global
         ov = padded.reshape(-1)[oi].astype(np.float32, copy=False)
-        payload = pipelines.encode(seq, sp.pipeline)
+        payload, penc = self._encode_codes(seq)
         header = dict(
             base_hdr,
             mode="interp",
@@ -169,6 +273,7 @@ class Compressor:
             schemes=list(schemes),
             reorder=bool(sp.reorder),
             n_outliers=int(oi.size),
+            **penc,
         )
         return _sections_pack(header, [payload, anc.tobytes(), oi.tobytes(), ov.tobytes()])
 
@@ -179,8 +284,8 @@ class Compressor:
         codes, outl, cfull, _ = lor.lorenzo_encode(jnp.asarray(xb), twoeb, len(spatial))
         codes, outl, cfull = np.asarray(codes), np.asarray(outl), np.asarray(cfull)
         fi = np.flatnonzero(outl.reshape(-1))
-        payload = pipelines.encode(codes.reshape(-1), sp.pipeline)
-        header = dict(base_hdr, mode="lorenzo", batch=int(xb.shape[0]), spatial=list(spatial), n_outliers=int(fi.size))
+        payload, penc = self._encode_codes(codes.reshape(-1))
+        header = dict(base_hdr, mode="lorenzo", batch=int(xb.shape[0]), spatial=list(spatial), n_outliers=int(fi.size), **penc)
         return _sections_pack(header, [payload, fi.astype(np.int64).tobytes(), cfull.reshape(-1)[fi].astype(np.int32).tobytes()])
 
     def _compress_offset1d(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
@@ -249,6 +354,11 @@ class Compressor:
 
 
 # ------------------------------------------------------------------ presets
+def cusz_hi_auto(eb=1e-3, **kw) -> Compressor:
+    """Orchestrated mode: per-field best-fit lossless pipeline (§5.2)."""
+    return Compressor(CompressorSpec(eb=eb, pipeline="auto", **kw))
+
+
 def cusz_hi_cr(eb=1e-3, **kw) -> Compressor:
     return Compressor(CompressorSpec(eb=eb, pipeline="cr", **kw))
 

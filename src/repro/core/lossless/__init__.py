@@ -1,1 +1,16 @@
-from .pipelines import PIPELINES, decode, encode  # noqa: F401
+from .orchestrate import (  # noqa: F401
+    choose_pipeline,
+    encode_auto,
+    portable_pipelines,
+    stream_stats,
+)
+from .pipelines import (  # noqa: F401
+    PIPELINES,
+    decode,
+    encode,
+    encode_v1,
+    get_pipeline,
+    register_pipeline,
+    registered_pipelines,
+)
+from .stages import Stage, get_stage, register_stage, registered_stages  # noqa: F401

@@ -1,0 +1,169 @@
+"""Adaptive lossless-pipeline orchestration (paper §5.2's exploration).
+
+cuSZ-Hi's second contribution is that the best-fit lossless encoding stack
+depends on the data: dense high-entropy code streams want Huffman-first
+(CR pipeline), sparse/run-heavy streams want shuffle+run-reduction (TP/FZ),
+near-incompressible streams want store-through. This module reproduces
+that exploration *online*, per field:
+
+1. sample the quantization-code stream (a few contiguous slices, so run
+   structure survives — a strided sample would destroy it);
+2. compute cheap stream statistics — byte-histogram entropy, zero-run
+   density, outlier rate. The histogram can come from the Pallas
+   histogram256 kernel (repro.kernels.histogram) via the ``histogram``
+   hook; the numpy bincount default is the same arithmetic on host;
+3. pre-score every registered pipeline with the per-stage ``estimate``
+   cost hooks, then trial-encode the sample through the top candidates
+   and pick the smallest output.
+
+The winner and the sampled statistics are recorded per field in the
+container header, so decode never re-infers anything — the pipeline stream
+is self-describing and the record is for observability and reproducibility.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .pipelines import PIPELINES, encode, get_pipeline
+from .stages import get_stage
+
+DEFAULT_SAMPLE_BYTES = 1 << 16
+_N_SLICES = 4
+
+
+def sample_stream(data: np.ndarray, sample_bytes: int = DEFAULT_SAMPLE_BYTES) -> np.ndarray:
+    """Contiguous multi-slice sample: _N_SLICES evenly spaced windows.
+
+    Windows never overlap for data larger than the sample budget, and the
+    slices stay contiguous so repeat/run statistics are representative.
+    """
+    data = np.ascontiguousarray(data, np.uint8).reshape(-1)
+    n = data.size
+    if n <= sample_bytes:
+        return data
+    per = sample_bytes // _N_SLICES
+    starts = [(n - per) * i // (_N_SLICES - 1) for i in range(_N_SLICES)]
+    return np.concatenate([data[s : s + per] for s in starts])
+
+
+def stream_stats(sample: np.ndarray, n_total: int | None = None, histogram=None) -> dict:
+    """Cheap per-stream statistics driving the stage cost hooks.
+
+    ``histogram``: optional callable mapping a uint8 array to 256 counts
+    (e.g. the Pallas histogram256 kernel); defaults to ``np.bincount``.
+    """
+    sample = np.ascontiguousarray(sample, np.uint8).reshape(-1)
+    hist = np.asarray(
+        histogram(sample) if histogram is not None else np.bincount(sample, minlength=256),
+        np.int64,
+    )
+    m = int(hist.sum())
+    if m > 0:
+        p = hist[hist > 0].astype(np.float64) / m
+        entropy = float(-(p * np.log2(p)).sum())
+        zero_frac = float(hist[0]) / m
+        # outliers: codes far from the 128-centered quantization band
+        outlier_frac = float(hist[:64].sum() + hist[192:].sum()) / m
+    else:
+        entropy = zero_frac = outlier_frac = 0.0
+    run_frac = float(np.mean(sample[1:] == sample[:-1])) if sample.size > 1 else 0.0
+    return {
+        "n": int(n_total if n_total is not None else sample.size),
+        "sample_n": int(sample.size),
+        "entropy": entropy,
+        "zero_frac": zero_frac,
+        "run_frac": run_frac,
+        "outlier_frac": outlier_frac,
+    }
+
+
+def estimate_pipeline(stages, stats: dict) -> float:
+    """Predicted compressed fraction: product of per-stage cost hooks.
+
+    Crude (stage interactions are ignored) but cheap; used only to rank
+    candidates before the trial encode refines the choice.
+    """
+    frac = 1.0
+    for name in stages:
+        frac *= min(1.0, float(get_stage(name).estimate(stats)))
+    return frac
+
+
+def portable_pipelines() -> list[str]:
+    """Registered pipelines whose every stage decodes with no optional deps.
+
+    Durable artifacts (checkpoints, relayed gradient payloads) restrict the
+    orchestrator to these, so a stream written on a machine with optional
+    codecs installed (e.g. zstandard) never becomes unreadable elsewhere.
+    """
+    return sorted(
+        nm for nm, stages in PIPELINES.items()
+        if all(get_stage(s).portable for s in stages)
+    )
+
+
+def _choose(
+    data: np.ndarray,
+    candidates=None,
+    *,
+    sample_bytes: int = DEFAULT_SAMPLE_BYTES,
+    max_trials: int | None = None,
+    histogram=None,
+    portable_only: bool = False,
+):
+    if candidates is not None:
+        names = sorted(candidates)
+    elif portable_only:
+        names = portable_pipelines()
+    else:
+        names = sorted(PIPELINES)
+    for nm in names:
+        get_pipeline(nm)  # raises with the registered list on typos
+    data = np.ascontiguousarray(data, np.uint8).reshape(-1)
+    sample = sample_stream(data, sample_bytes)
+    stats = stream_stats(sample, n_total=data.size, histogram=histogram)
+    est = {nm: estimate_pipeline(get_pipeline(nm), stats) for nm in names}
+    order = sorted(names, key=lambda nm: (est[nm], nm))
+    if max_trials is not None:
+        order = order[: max(1, max_trials)]
+    bufs = {nm: encode(sample, nm) for nm in order}
+    trial = {nm: len(b) for nm, b in bufs.items()}
+    best = min(order, key=lambda nm: (trial[nm], nm))
+    record = {
+        "pipeline": best,
+        "stats": stats,
+        "estimates": est,
+        "trial_bytes": trial,
+    }
+    # sample_stream returns the stream itself when it fits the budget; the
+    # winning trial encoding IS the final encoding then — reuse it
+    full = bufs[best] if sample.size == data.size else None
+    return best, record, full
+
+
+def choose_pipeline(data: np.ndarray, candidates=None, **kw) -> tuple[str, dict]:
+    """Pick the best-fit registered pipeline for ``data``.
+
+    Returns ``(name, record)`` where ``record`` carries the sampled stats,
+    the per-pipeline estimates, and the trial-encode sizes — everything the
+    container header needs to make the choice reproducible. ``candidates``
+    narrows the search; ``portable_only=True`` restricts it to
+    :func:`portable_pipelines`; ``max_trials`` caps the trial encodes to
+    the estimate-ranked top candidates.
+    """
+    best, record, _ = _choose(data, candidates, **kw)
+    return best, record
+
+
+def encode_auto(data: np.ndarray, **kw) -> tuple[bytes, dict]:
+    """Orchestrated encode: choose the best-fit pipeline, then encode.
+
+    Returns ``(stream, record)``; the stream is self-describing, so decode
+    is plain :func:`repro.core.lossless.pipelines.decode`. Streams no
+    larger than the sample budget are encoded exactly once (the winning
+    trial encoding is returned directly).
+    """
+    best, record, full = _choose(data, **kw)
+    if full is not None:
+        return full, record
+    return encode(data, best), record

@@ -1,92 +1,149 @@
-"""Composable lossless pipelines (paper §5.2, Figure 7).
+"""Composable lossless pipelines over the stage registry (paper §5.2, Fig. 7).
 
-A pipeline is a list of stage names; each stage maps a byte stream to
-(payload, header) and back. The two cuSZ-Hi pipelines:
+A pipeline is a named sequence of registered stages
+(:mod:`repro.core.lossless.stages`); :func:`register_pipeline` validates
+every stage name against the registry at registration time, so a typo fails
+with the list of known stages instead of deep inside an encode. The two
+cuSZ-Hi pipelines:
 
     CR mode:  hf  -> rre4 -> tcms8 -> rze1      (ratio-preferred)
     TP mode:  tcms1 -> bit1 -> rre1             (throughput-preferred)
+
+``pipeline="auto"`` (see :mod:`repro.core.lossless.orchestrate`) samples the
+stream and picks the best-fit registered pipeline per field.
+
+Stream format (v2, this module's framing): ``b"LLP2"`` magic, then one
+record per stage — flags byte (bit0 = store-through skip for stages that
+expanded the stream), name, and the stage's *binary-packed* header — then
+the final payload. Streams written before this format (a JSON meta block
+prefixed by its u32 length) are detected by the missing magic and decoded
+through the same stage registry, so old containers keep working.
 """
 from __future__ import annotations
 
 import json
+import struct
 
 import numpy as np
 
-from . import bitshuffle as _bit
-from . import huffman as _hf
-from . import rre as _rre
-from . import tcms as _tcms
+from .stages import get_stage
 
-PIPELINES = {
-    "cr": ("hf", "rre4", "tcms8", "rze1"),
-    "tp": ("tcms1", "bit1", "rre1"),
-    "hf": ("hf",),
-    "none": (),
-    # baseline pipelines (see repro.core.baselines)
-    "fz": ("bit1", "rre1"),
-    # beyond-paper: CR pipeline with an open-source zstd tail (replaces the
-    # role Bitcomp plays for cuSZ-IB, without the proprietary dependency)
-    "crz": ("hf", "rre4", "tcms8", "rze1", "zstd"),
-}
+_MAGIC = b"LLP2"
+
+PIPELINES: dict[str, tuple] = {}  # name -> stage-name tuple (live registry)
 
 
-def _encode_stage(name: str, data: np.ndarray):
-    if name == "hf":
-        return _hf.encode(data)
-    if name.startswith("rre"):
-        return _rre.rre_encode(data, int(name[3:]))
-    if name.startswith("rze"):
-        return _rre.rze_encode(data, int(name[3:]))
-    if name.startswith("tcms"):
-        return _tcms.tcms_encode(data, int(name[4:]))
-    if name == "bit1":
-        return _bit.bitshuffle_encode(data)
-    if name == "zstd":
-        # zstandard is an optional dependency: fall back to stdlib zlib and
-        # record the codec actually used so decode dispatches correctly
-        try:
-            import zstandard
-
-            return zstandard.ZstdCompressor(level=6).compress(data.tobytes()), {"c": "zstd"}
-        except ImportError:
-            import zlib
-
-            return zlib.compress(data.tobytes(), 6), {"c": "zlib"}
-    raise ValueError(f"unknown stage {name!r}")
+def register_pipeline(name: str, stages, *, overwrite: bool = False) -> tuple:
+    """Register a named pipeline; every stage must already be registered."""
+    stages = tuple(stages)
+    for s in stages:
+        get_stage(s)  # raises with the registered-stage list on typos
+    if name in PIPELINES and not overwrite and PIPELINES[name] != stages:
+        raise ValueError(
+            f"pipeline {name!r} is already registered as {PIPELINES[name]}; "
+            "pass overwrite=True to replace it"
+        )
+    PIPELINES[name] = stages
+    return stages
 
 
-def _decode_stage(name: str, payload: bytes, header: dict) -> np.ndarray:
-    if name == "hf":
-        return _hf.decode(payload, header)
-    if name.startswith("rre"):
-        return _rre.rre_decode(payload, header)
-    if name.startswith("rze"):
-        return _rre.rze_decode(payload, header)
-    if name.startswith("tcms"):
-        return _tcms.tcms_decode(payload, header)
-    if name == "bit1":
-        return _bit.bitshuffle_decode(payload, header)
-    if name == "zstd":
-        if header.get("c", "zstd") == "zlib":
-            import zlib
+def get_pipeline(name: str) -> tuple:
+    try:
+        return PIPELINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown pipeline {name!r}; "
+            f"registered pipelines: {', '.join(sorted(PIPELINES))} (or 'auto')"
+        ) from None
 
-            return np.frombuffer(zlib.decompress(payload), np.uint8)
-        try:
-            import zstandard
-        except ImportError as e:
-            raise ImportError(
-                "this stream was compressed with the optional 'zstandard' package; install it to decode"
-            ) from e
-        return np.frombuffer(zstandard.ZstdDecompressor().decompress(payload), np.uint8)
-    raise ValueError(f"unknown stage {name!r}")
+
+def registered_pipelines() -> dict[str, tuple]:
+    return dict(PIPELINES)
+
+
+register_pipeline("cr", ("hf", "rre4", "tcms8", "rze1"))
+register_pipeline("tp", ("tcms1", "bit1", "rre1"))
+register_pipeline("hf", ("hf",))
+register_pipeline("none", ())
+# baseline pipelines (see repro.core.baselines)
+register_pipeline("fz", ("bit1", "rre1"))
+# beyond-paper: CR pipeline with an open-source zstd tail (replaces the
+# role Bitcomp plays for cuSZ-IB, without the proprietary dependency)
+register_pipeline("crz", ("hf", "rre4", "tcms8", "rze1", "zstd"))
+
+
+def _resolve(pipeline) -> tuple:
+    return get_pipeline(pipeline) if isinstance(pipeline, str) else tuple(pipeline)
 
 
 def encode(data: np.ndarray, pipeline: str | tuple) -> bytes:
-    stages = PIPELINES[pipeline] if isinstance(pipeline, str) else tuple(pipeline)
+    stages = _resolve(pipeline)
+    cur = np.ascontiguousarray(data, np.uint8)
+    recs = []
+    for name in stages:
+        st = get_stage(name)
+        payload, hdr = st.encode(cur)
+        nxt = np.frombuffer(payload, np.uint8) if isinstance(payload, bytes) else payload
+        hb = st.pack_header(hdr)
+        if nxt.size + len(hb) >= cur.size and cur.size > 0:
+            recs.append((name, 1, b""))  # stage expands: store-through
+            continue
+        recs.append((name, 0, hb))
+        cur = nxt
+    out = bytearray(_MAGIC)
+    out += struct.pack("<B", len(recs))
+    for name, flags, hb in recs:
+        nb = name.encode()
+        out += struct.pack("<BB", flags, len(nb)) + nb + struct.pack("<I", len(hb)) + hb
+    out += cur.tobytes()
+    return bytes(out)
+
+
+def decode(buf: bytes) -> np.ndarray:
+    if buf[:4] == _MAGIC:
+        nstages = buf[4]
+        off = 5
+        recs = []
+        for _ in range(nstages):
+            flags, nlen = struct.unpack_from("<BB", buf, off)
+            off += 2
+            name = bytes(buf[off : off + nlen]).decode()
+            off += nlen
+            (hlen,) = struct.unpack_from("<I", buf, off)
+            off += 4
+            recs.append((name, flags, bytes(buf[off : off + hlen])))
+            off += hlen
+        cur = buf[off:]
+        for name, flags, hb in reversed(recs):
+            if flags & 1:
+                continue
+            st = get_stage(name)
+            out = st.decode(cur, st.unpack_header(hb))
+            cur = out.tobytes() if isinstance(out, np.ndarray) else out
+        return np.frombuffer(cur, np.uint8)
+    # legacy stream: u32 length-prefixed JSON meta, dict headers
+    mlen = int.from_bytes(buf[:4], "little")
+    meta = json.loads(buf[4 : 4 + mlen])
+    cur = buf[4 + mlen :]
+    for name, hdr in zip(reversed(meta["stages"]), reversed(meta["headers"])):
+        if hdr.get("_skip"):
+            continue
+        out = get_stage(name).decode(cur, hdr)
+        cur = out.tobytes() if isinstance(out, np.ndarray) else out
+    return np.frombuffer(cur, np.uint8)
+
+
+def encode_v1(data: np.ndarray, pipeline: str | tuple) -> bytes:
+    """Legacy (pre-v2) stream writer: JSON meta block with dict headers.
+
+    Kept so tests can fabricate old streams bit-compatibly and so tooling
+    can still emit streams readable by pre-registry checkouts.
+    """
+    stages = _resolve(pipeline)
     cur = np.ascontiguousarray(data, np.uint8)
     headers = []
     for name in stages:
-        payload, hdr = _encode_stage(name, cur)
+        payload, hdr = get_stage(name).encode(cur)
         nxt = np.frombuffer(payload, np.uint8) if isinstance(payload, bytes) else payload
         if nxt.size + len(json.dumps(hdr)) >= cur.size and cur.size > 0:
             headers.append({"_skip": True})  # stage expands: store-through
@@ -95,15 +152,3 @@ def encode(data: np.ndarray, pipeline: str | tuple) -> bytes:
         cur = nxt
     meta = json.dumps({"stages": list(stages), "headers": headers}).encode()
     return len(meta).to_bytes(4, "little") + meta + cur.tobytes()
-
-
-def decode(buf: bytes) -> np.ndarray:
-    mlen = int.from_bytes(buf[:4], "little")
-    meta = json.loads(buf[4 : 4 + mlen])
-    cur = buf[4 + mlen :]
-    for name, hdr in zip(reversed(meta["stages"]), reversed(meta["headers"])):
-        if hdr.get("_skip"):
-            continue
-        cur = _decode_stage(name, cur, hdr)
-        cur = cur.tobytes() if isinstance(cur, np.ndarray) else cur
-    return np.frombuffer(cur, np.uint8)

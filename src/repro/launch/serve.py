@@ -1,6 +1,12 @@
 """Batched serving driver: prefill a prompt batch, decode N tokens.
 
     python -m repro.launch.serve --arch gemma3-12b --scaled --tokens 32
+
+``--kv-compress`` demonstrates error-bounded KV-cache offload on the serve
+path: after prefill, every float cache leaf rides the cuSZ-Hi compressor
+with the orchestrated ``pipeline="auto"`` lossless stack (best-fit
+registered pipeline per leaf), is restored, and decode continues from the
+reconstructed cache — the paged-out/paged-in scenario for long prompts.
 """
 from __future__ import annotations
 
@@ -15,6 +21,35 @@ from repro.configs import get_config
 from repro.models import decode_step, init_params, prefill
 
 
+def _kv_roundtrip(cache, eb: float):
+    """Compress+restore float cache leaves through pipeline='auto'.
+
+    Returns (restored cache, stats dict). Non-float or tiny leaves pass
+    through untouched (they are index/position bookkeeping, not KV data).
+    """
+    from repro.core import Compressor, cusz_hi_auto
+
+    comp = cusz_hi_auto(eb=eb, autotune=False)
+    stats = {"raw_bytes": 0, "comp_bytes": 0, "pipelines": {}}
+
+    def one(leaf):
+        arr = np.asarray(leaf)
+        if not jnp.issubdtype(leaf.dtype, jnp.floating) or arr.size < 4096:
+            return leaf
+        buf = comp.compress(arr.astype(np.float32))
+        hdr = Compressor.inspect(buf)
+        picked = hdr.get("pipeline", "?")
+        stats["raw_bytes"] += arr.size * arr.dtype.itemsize
+        stats["comp_bytes"] += len(buf)
+        stats["pipelines"][picked] = stats["pipelines"].get(picked, 0) + 1
+        out = comp.decompress(buf).reshape(arr.shape)
+        return jnp.asarray(out, leaf.dtype)
+
+    cache = jax.tree.map(one, cache)
+    stats["cr"] = stats["raw_bytes"] / max(stats["comp_bytes"], 1)
+    return cache, stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-12b")
@@ -23,6 +58,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-compress", action="store_true",
+                    help="offload/restore the prefill KV cache through pipeline='auto'")
+    ap.add_argument("--kv-eb", type=float, default=1e-3,
+                    help="value-range-relative error bound for --kv-compress")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -41,6 +80,15 @@ def main(argv=None):
     logits, cache = jax.jit(lambda p, b: prefill(p, cfg, b, cache_len=total))(params, batch)
     logits.block_until_ready()
     t_prefill = time.time() - t0
+
+    if args.kv_compress:
+        t0 = time.time()
+        cache, kv = _kv_roundtrip(cache, args.kv_eb)
+        print(
+            f"kv-cache offload: {kv['raw_bytes']/2**20:.1f} MiB -> {kv['comp_bytes']/2**20:.1f} MiB "
+            f"(CR {kv['cr']:.2f}, eb={args.kv_eb:g} rel, pipelines {kv['pipelines']}, "
+            f"{time.time()-t0:.2f}s roundtrip)"
+        )
 
     dstep = jax.jit(lambda p, c, t, i: decode_step(p, cfg, t, i, c), donate_argnums=(1,))
     tok = jnp.argmax(logits, -1).astype(jnp.int32)

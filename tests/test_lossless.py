@@ -58,7 +58,7 @@ def test_bitshuffle_roundtrip(name, data):
     assert np.array_equal(bs.bitshuffle_decode(payload, hdr), data)
 
 
-@pytest.mark.parametrize("pipe", ["cr", "tp", "crz", "hf", "fz", "none"])
+@pytest.mark.parametrize("pipe", sorted(pp.registered_pipelines()))
 @pytest.mark.parametrize("name,data", list(_streams()))
 def test_pipelines_roundtrip(pipe, name, data):
     buf = pp.encode(data, pipe)

@@ -1,0 +1,265 @@
+"""Stage registry, adaptive orchestration, and container v2/v1 compat."""
+import numpy as np
+import pytest
+
+from repro.core import Compressor, CompressorSpec, compression_ratio, cusz_hi_auto
+from repro.core.compressor import _sections_pack_v1, _sections_unpack
+from repro.core.lossless import orchestrate as orc
+from repro.core.lossless import pipelines as pp
+from repro.core.lossless import stages as stg
+from repro.core.serial import pack_obj, unpack_obj
+
+_RNG = np.random.default_rng(0)
+STREAMS = {
+    "empty": np.zeros(0, np.uint8),
+    "constant": np.full(20000, 128, np.uint8),
+    "sparse": np.where(_RNG.random(20000) < 0.01, _RNG.integers(1, 256, 20000), 0).astype(np.uint8),
+    "dense-random": _RNG.integers(0, 256, 20000, dtype=np.uint8),
+}
+
+
+# ------------------------------------------------------------------ registry
+def test_every_registered_pipeline_uses_registered_stages():
+    for name, stage_names in pp.registered_pipelines().items():
+        for s in stage_names:
+            assert stg.get_stage(s).name == s, (name, s)
+
+
+@pytest.mark.parametrize("pipe", sorted(pp.PIPELINES))
+@pytest.mark.parametrize("stream", sorted(STREAMS))
+def test_registered_pipelines_roundtrip(pipe, stream):
+    data = STREAMS[stream]
+    assert np.array_equal(pp.decode(pp.encode(data, pipe)), data)
+
+
+@pytest.mark.parametrize("pipe", sorted(pp.PIPELINES))
+@pytest.mark.parametrize("stream", sorted(STREAMS))
+def test_legacy_v1_streams_decode(pipe, stream):
+    data = STREAMS[stream]
+    assert np.array_equal(pp.decode(pp.encode_v1(data, pipe)), data)
+
+
+def test_register_stage_collision_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        stg.register_stage("hf", lambda d: (b"", {}), lambda p, h: np.zeros(0, np.uint8))
+
+
+def test_unknown_stage_lists_registered_names():
+    with pytest.raises(ValueError, match="registered stages"):
+        stg.get_stage("definitely-not-a-stage")
+    with pytest.raises(ValueError, match="registered stages"):
+        pp.register_pipeline("broken", ("hf", "definitely-not-a-stage"))
+
+
+def test_unknown_pipeline_lists_registered_names():
+    with pytest.raises(ValueError, match="registered pipelines"):
+        pp.get_pipeline("definitely-not-a-pipeline")
+
+
+def test_spec_validates_at_construction():
+    with pytest.raises(ValueError, match="registered pipelines"):
+        CompressorSpec(pipeline="definitely-not-a-pipeline")
+    with pytest.raises(ValueError, match="backend"):
+        CompressorSpec(backend="cuda")
+    CompressorSpec(pipeline="auto")  # auto is always valid
+
+
+def test_third_party_stage_rides_pipelines():
+    """A stage registered outside core works in a pipeline without core edits."""
+    name, pipe = "test-xor7", "test-xor7-pipe"
+    if name not in stg.registered_stages():
+        stg.register_stage(
+            name,
+            lambda d: ((np.ascontiguousarray(d, np.uint8) ^ 7).tobytes(), {"n": int(d.size)}),
+            lambda p, h: np.frombuffer(p, np.uint8)[: h["n"]] ^ 7,
+        )
+        pp.register_pipeline(pipe, (name, "zstd"))
+    data = STREAMS["sparse"]
+    assert np.array_equal(pp.decode(pp.encode(data, pipe)), data)
+
+
+# -------------------------------------------------------------- orchestrator
+def test_stream_stats_sanity():
+    s = orc.stream_stats(STREAMS["constant"])
+    assert s["entropy"] == pytest.approx(0.0) and s["run_frac"] == pytest.approx(1.0)
+    s = orc.stream_stats(STREAMS["dense-random"])
+    assert s["entropy"] > 7.5 and s["run_frac"] < 0.05
+    s = orc.stream_stats(np.zeros(1000, np.uint8))
+    assert s["zero_frac"] == pytest.approx(1.0)
+
+
+def test_stream_stats_accepts_histogram_hook():
+    calls = []
+
+    def hist(d):
+        calls.append(d.size)
+        return np.bincount(d, minlength=256)
+
+    s = orc.stream_stats(STREAMS["sparse"], histogram=hist)
+    assert calls and s["sample_n"] == STREAMS["sparse"].size
+
+
+def test_sample_stream_windows_are_contiguous_and_bounded():
+    data = np.arange(1 << 20, dtype=np.uint64).astype(np.uint8)
+    s = orc.sample_stream(data, 1 << 14)
+    assert s.size == 1 << 14
+    small = np.arange(100, dtype=np.uint8)
+    assert np.array_equal(orc.sample_stream(small, 1 << 14), small)
+
+
+@pytest.mark.parametrize("stream", sorted(STREAMS))
+def test_auto_roundtrip_and_record(stream):
+    data = STREAMS[stream]
+    buf, record = orc.encode_auto(data)
+    assert np.array_equal(pp.decode(buf), data)
+    assert record["pipeline"] in pp.PIPELINES
+    assert set(record["trial_bytes"]) <= set(pp.PIPELINES)
+    assert {"entropy", "zero_frac", "run_frac", "outlier_frac"} <= set(record["stats"])
+
+
+def test_portable_pipelines_exclude_optional_codecs():
+    portable = orc.portable_pipelines()
+    assert "crz" not in portable  # zstd tail may need the optional package
+    assert {"cr", "tp", "hf", "fz", "none"} <= set(portable)
+
+
+def test_encode_auto_small_stream_reuses_trial_encoding():
+    data = STREAMS["sparse"]  # fits the sample budget entirely
+    buf, record = orc.encode_auto(data)
+    assert buf == pp.encode(data, record["pipeline"])
+    assert len(buf) == record["trial_bytes"][record["pipeline"]]
+
+
+def test_encode_auto_portable_only_and_candidates():
+    data = STREAMS["sparse"]
+    buf, record = orc.encode_auto(data, portable_only=True)
+    assert record["pipeline"] in orc.portable_pipelines()
+    assert np.array_equal(pp.decode(buf), data)
+    buf, record = orc.encode_auto(data, candidates=("tp", "none"))
+    assert record["pipeline"] in ("tp", "none")
+    with pytest.raises(ValueError, match="registered pipelines"):
+        orc.encode_auto(data, candidates=("not-a-pipeline",))
+
+
+def test_spec_pipeline_candidates_restrict_auto():
+    x = _smooth()
+    c = Compressor(CompressorSpec(eb=1e-3, pipeline="auto", autotune=False,
+                                  pipeline_candidates=("tp", "hf")))
+    hdr = Compressor.inspect(c.compress(x))
+    assert hdr["pipeline"] in ("tp", "hf")
+    with pytest.raises(ValueError, match="registered pipelines"):
+        CompressorSpec(pipeline="auto", pipeline_candidates=("bogus",))
+
+
+@pytest.mark.parametrize("stream", sorted(STREAMS))
+def test_auto_matches_or_beats_worst_fixed(stream):
+    data = STREAMS[stream]
+    if data.size == 0:
+        pytest.skip("CR undefined on empty streams")
+    sizes = {pipe: len(pp.encode(data, pipe)) for pipe in ("cr", "tp", "hf", "fz", "none")}
+    buf, _ = orc.encode_auto(data)
+    assert len(buf) <= max(sizes.values())
+    # the sample covers these streams entirely, so auto IS the argmin
+    assert len(buf) <= min(sizes.values()) * 1.01
+
+
+# ----------------------------------------------------- container v2 + compat
+def _smooth(side=32):
+    g = np.stack(np.meshgrid(*[np.linspace(0, 3, side)] * 3, indexing="ij"))
+    return (np.sin(g[0] * 2.1) * np.cos(g[1] * 1.7) + 0.5 * np.sin(g[2] * 3.3 + g[0])).astype(np.float32)
+
+
+def test_auto_compressor_records_choice_per_field():
+    x = _smooth()
+    c = cusz_hi_auto(eb=1e-3, autotune=False)
+    buf = c.compress(x)
+    hdr = Compressor.inspect(buf)
+    assert hdr["pipeline"] in pp.PIPELINES
+    assert hdr["pchoice"]["stats"]["n"] > 0
+    out = c.decompress(buf)
+    rng = float(x.max() - x.min())
+    assert np.abs(out - x).max() <= 1e-3 * rng * (1 + 1e-5)
+
+
+def test_auto_compressor_cr_not_worse_than_worst_fixed():
+    x = _smooth(40)
+    crs = {}
+    for pipe in ("cr", "tp", "hf", "fz"):
+        c = Compressor(CompressorSpec(eb=1e-3, pipeline=pipe, autotune=False))
+        crs[pipe] = compression_ratio(x, c.compress(x))
+    c = cusz_hi_auto(eb=1e-3, autotune=False)
+    cr_auto = compression_ratio(x, c.compress(x))
+    assert cr_auto >= min(crs.values())
+
+
+def test_container_v1_reads_back_bit_exactly():
+    """A pre-registry container (v1 JSON header + v1 JSON-meta lossless
+    stream) must decompress identically to its v2 twin."""
+    x = _smooth()
+    c = Compressor(CompressorSpec(eb=1e-3, pipeline="cr", autotune=False))
+    v2 = c.compress(x)
+    header, sections = _sections_unpack(v2)
+    codes = pp.decode(sections[0])
+    v1_header = {k: v for k, v in header.items() if k != "pipeline"}
+    v1 = _sections_pack_v1(v1_header, [pp.encode_v1(codes, "cr")] + list(sections[1:]))
+    assert np.array_equal(c.decompress(v1), c.decompress(v2))
+
+
+def test_container_v1_const_mode_reads_back():
+    x = np.full((16, 16, 16), 2.5, np.float32)
+    c = Compressor(CompressorSpec(eb=1e-3, pipeline="cr"))
+    header, sections = _sections_unpack(c.compress(x))
+    v1 = _sections_pack_v1({k: v for k, v in header.items() if k != "pipeline"}, list(sections))
+    assert np.array_equal(c.decompress(v1), x)
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError, match="container magic"):
+        _sections_unpack(b"NOTMAGICxxxxxxxx")
+
+
+def test_serial_roundtrip():
+    obj = {
+        "shape": [3, 4, 5],
+        "eb": 1e-3,
+        "name": "interp",
+        "flag": True,
+        "none": None,
+        "nested": {"trial": {"cr": 12.5}, "raw": b"\x00\x01"},
+    }
+    assert unpack_obj(pack_obj(obj)) == obj
+    assert unpack_obj(pack_obj(np.int64(7))) == 7
+    assert unpack_obj(pack_obj(np.float32(0.5))) == 0.5
+
+
+# ------------------------------------------------------------------ consumers
+def test_checkpoint_meta_records_pipeline_and_legacy_decodes():
+    from repro.checkpoint.codec import _as_field, decode_tensor, encode_tensor
+
+    x = np.random.default_rng(3).standard_normal((128, 64)).astype(np.float32)
+    payload, meta = encode_tensor(x, eb=1e-3)
+    assert meta["mode"] == "cuszhi" and meta["pipeline"] == "auto"
+    # the recorded per-field choice must be restorable without optional deps
+    assert Compressor.inspect(payload)["pipeline"] in orc.portable_pipelines()
+    rng = float(x.max() - x.min())
+    assert np.abs(decode_tensor(payload, meta) - x).max() <= 1e-3 * rng * (1 + 1e-5)
+    # a checkpoint written before the pipeline was recorded (hardcoded "tp")
+    comp = Compressor(CompressorSpec(eb=1e-3, pipeline="tp", autotune=False))
+    legacy_payload = comp.compress(_as_field(x))
+    legacy_meta = {
+        "shape": list(x.shape), "dtype": "float32", "mode": "cuszhi",
+        "eb": 1e-3, "field_shape": list(_as_field(x).shape),
+    }
+    assert np.abs(decode_tensor(legacy_payload, legacy_meta) - x).max() <= 1e-3 * rng * (1 + 1e-5)
+
+
+def test_grad_pack_roundtrip_auto_and_fixed():
+    from repro.optim.grad_compress import pack_quantized, unpack_quantized
+
+    rng = np.random.default_rng(4)
+    q = np.clip(np.round(rng.laplace(0, 2, 50000)), -127, 127).astype(np.int8)
+    for pipe in ("auto", "tp", "none"):
+        buf = pack_quantized(q.reshape(250, 200), 0.125, pipeline=pipe)
+        q2, scale = unpack_quantized(buf)
+        assert np.array_equal(q2, q.reshape(250, 200)) and scale == 0.125
+    assert len(pack_quantized(q, 1.0)) < q.nbytes  # sparse-ish grads compress
