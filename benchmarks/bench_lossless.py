@@ -1,16 +1,22 @@
 """Lossless hot-path benchmark: MB/s per stage + CR, emitted as JSON.
 
     PYTHONPATH=src python -m benchmarks.bench_lossless [--out BENCH_lossless.json]
+    PYTHONPATH=src python -m benchmarks.bench_lossless --smoke   # tiny CI grid
 
 Measures each lossless stage on a 4 MiB quantization-code-like stream (the
 codec's actual workload: Laplacian codes centered on 128), sweeps *every
 registered pipeline* plus the orchestrated ``auto`` mode over a synthetic
-field suite (each row carries a ``pipeline`` dimension with CR + MB/s),
-and times the end-to-end compressor on a 64^3 smooth float32 field (after
-JIT warmup). Each timing is the best of ``--reps`` runs (timeit-style
-min-time, which rejects scheduler noise on shared hosts); the JSON records
-the rep count and, per stream, how auto's CR compares to the best fixed
-pipeline.
+byte-stream suite (each row carries a ``pipeline`` dimension with CR +
+MB/s), sweeps the fixed-steps predictor configurations plus the
+plan-driven ``predictor="auto"`` over a synthetic *field* suite (each row
+carries a ``predictor`` dimension; the auto rows record the chosen
+PredictorPlan and ``cr_vs_best_fixed``), and times the end-to-end
+compressor on a smooth float32 field (after JIT warmup). Each timing is
+the best of ``--reps`` runs (timeit-style min-time, which rejects
+scheduler noise on shared hosts).
+
+``--smoke`` shrinks every grid (64 KiB streams, 24^3 fields, 1 rep) so CI
+can run the whole script in seconds and upload the JSON as an artifact.
 """
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ import time
 
 import numpy as np
 
-from repro.core import compression_ratio, cusz_hi_cr, max_abs_err
+from repro.core import Compressor, CompressorSpec, compression_ratio, cusz_hi_cr, max_abs_err
+from repro.core.autotune import fixed_step_baselines
 from repro.core.lossless import bitshuffle as bs
 from repro.core.lossless import huffman as hf
 from repro.core.lossless import orchestrate as orc
@@ -29,6 +36,14 @@ from repro.core.lossless import rre, tcms
 
 STREAM_BYTES = 4 << 20
 FIELD_SIDE = 64
+PRED_FIELD_SIDE = 48  # 27 blocks: the planner samples exhaustively
+SMOKE_STREAM_BYTES = 64 << 10
+SMOKE_FIELD_SIDE = 24
+
+# The fixed-steps baselines predictor="auto" must match or beat (same
+# lossless pipeline, so the comparison isolates the lossy side). Shared
+# with tests/test_autotune.py via the importable core/data modules.
+FIXED_PREDICTORS = fixed_step_baselines()
 
 
 def _best(fn, reps: int) -> float:
@@ -67,7 +82,7 @@ def bench_stage(name, enc, dec, data, reps) -> dict:
 
 
 def synthetic_streams(nbytes: int = STREAM_BYTES) -> dict:
-    """The synthetic field suite: code-stream laws the orchestrator must span."""
+    """The synthetic stream suite: code-stream laws the orchestrator must span."""
     rng = np.random.default_rng(7)
     return {
         "laplace8": quant_code_stream(nbytes, scale=8.0),
@@ -76,6 +91,45 @@ def synthetic_streams(nbytes: int = STREAM_BYTES) -> dict:
         "sparse": np.where(rng.random(nbytes) < 0.02, rng.integers(0, 256, nbytes), 128).astype(np.uint8),
         "random": rng.integers(0, 256, nbytes, dtype=np.uint8),
     }
+
+
+def synthetic_fields(side: int = PRED_FIELD_SIDE) -> dict:
+    """The synthetic field suite for the predictor dimension: one field per
+    regime a spline/scheme/stride choice discriminates (repro.data)."""
+    from repro.data import predictor_suite
+
+    return predictor_suite(side)
+
+
+def sweep_predictors(x: np.ndarray, stream: str, reps: int, eb: float = 1e-3) -> list[dict]:
+    """Fixed-steps configs + predictor="auto" on one field; predictor rows."""
+    rng = float(x.max() - x.min())
+    rows = []
+
+    def case(predictor: str, comp: Compressor) -> dict:
+        buf = comp.compress(x)
+        y = comp.decompress(buf)
+        assert max_abs_err(x, y) <= eb * rng * (1 + 1e-4) + 1e-9, (stream, predictor)
+        te = _best(lambda: comp.compress(x), reps)
+        td = _best(lambda: comp.decompress(buf), reps)
+        return {
+            "stage": f"predictor:{predictor}",
+            "predictor": predictor,
+            "stream": stream,
+            "enc_mbps": x.nbytes / te / 1e6,
+            "dec_mbps": x.nbytes / td / 1e6,
+            "cr": compression_ratio(x, buf),
+        }
+
+    for name, cfg in FIXED_PREDICTORS.items():
+        rows.append(case(name, Compressor(CompressorSpec(eb=eb, pipeline="cr", autotune=False, **cfg))))
+    comp = Compressor(CompressorSpec(eb=eb, predictor="auto", pipeline="cr"))
+    row = case("auto", comp)
+    row["plan"] = str(comp.last_plan)
+    best_fixed = max(r["cr"] for r in rows)
+    row["cr_vs_best_fixed"] = row["cr"] / best_fixed
+    rows.append(row)
+    return rows
 
 
 def sweep_pipelines(data: np.ndarray, stream: str, reps: int) -> list[dict]:
@@ -117,8 +171,11 @@ def sweep_pipelines(data: np.ndarray, stream: str, reps: int) -> list[dict]:
     return rows
 
 
-def run(reps: int = 5) -> dict:
-    data = quant_code_stream()
+def run(reps: int = 5, smoke: bool = False) -> dict:
+    stream_bytes = SMOKE_STREAM_BYTES if smoke else STREAM_BYTES
+    field_side = SMOKE_FIELD_SIDE if smoke else FIELD_SIDE
+    pred_side = SMOKE_FIELD_SIDE if smoke else PRED_FIELD_SIDE
+    data = quant_code_stream(stream_bytes)
     rows = [
         bench_stage("hf", hf.encode, hf.decode, data, reps),
         bench_stage("rre4", lambda d: rre.rre_encode(d, 4), rre.rre_decode, data, reps),
@@ -126,10 +183,12 @@ def run(reps: int = 5) -> dict:
         bench_stage("tcms8", lambda d: tcms.tcms_encode(d, 8), tcms.tcms_decode, data, reps),
         bench_stage("bit1", bs.bitshuffle_encode, bs.bitshuffle_decode, data, reps),
     ]
-    for stream, sdata in synthetic_streams().items():
+    for stream, sdata in synthetic_streams(stream_bytes).items():
         rows.extend(sweep_pipelines(sdata, stream, reps))
+    for stream, field in synthetic_fields(pred_side).items():
+        rows.extend(sweep_predictors(field, stream, reps))
     # end-to-end compressor on a smooth field, warmed up (JIT + caches)
-    x = smooth_field()
+    x = smooth_field(field_side)
     comp = cusz_hi_cr(eb=1e-3)
     buf = comp.compress(x)
     y = comp.decompress(buf)
@@ -139,7 +198,7 @@ def run(reps: int = 5) -> dict:
     td = _best(lambda: comp.decompress(buf), reps)
     rows.append(
         {
-            "stage": "cusz_hi_cr:64^3",
+            "stage": f"cusz_hi_cr:{field_side}^3",
             "enc_mbps": x.nbytes / tc / 1e6,
             "dec_mbps": x.nbytes / td / 1e6,
             "compress_seconds": tc,
@@ -149,8 +208,10 @@ def run(reps: int = 5) -> dict:
     )
     return {
         "bench": "lossless_hot_path",
-        "stream_bytes": STREAM_BYTES,
-        "field": f"{FIELD_SIDE}^3 float32, eb=1e-3 rel",
+        "smoke": bool(smoke),
+        "stream_bytes": stream_bytes,
+        "field": f"{field_side}^3 float32, eb=1e-3 rel",
+        "pred_field": f"{pred_side}^3 float32, eb=1e-3 rel, pipeline=cr",
         "timing": f"best of {reps} reps after warmup",
         "stages": rows,
     }
@@ -160,13 +221,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_lossless.json")
     ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI: 64 KiB streams, 24^3 fields, 1 rep")
     args = ap.parse_args(argv)
-    result = run(args.reps)
+    if args.smoke:
+        args.reps = min(args.reps, 1)
+    result = run(args.reps, smoke=args.smoke)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for r in result["stages"]:
         tag = r["stage"] + (f"[{r['stream']}]" if "stream" in r else "")
         picked = f"  -> {r['picked']}" if "picked" in r else ""
+        if "plan" in r:
+            picked = f"  -> {r['plan']}  (x{r['cr_vs_best_fixed']:.3f} vs best fixed)"
         print(
             f"{tag:28s} enc {r['enc_mbps']:8.1f} MB/s   dec {r['dec_mbps']:8.1f} MB/s   CR {r['cr']:8.2f}{picked}"
         )

@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.core import (
     compression_ratio,
+    cusz_hi_autoplan,
     cusz_hi_cr,
     cusz_hi_crz,
     cusz_hi_tp,
@@ -23,6 +24,7 @@ COMPRESSORS = {
     "cuSZ-Hi-CR": cusz_hi_cr,
     "cuSZ-Hi-TP": cusz_hi_tp,
     "cuSZ-Hi-CRZ": cusz_hi_crz,  # beyond-paper mode
+    "cuSZ-Hi-Auto": cusz_hi_autoplan,  # plan-driven predictor + auto pipeline
     "cuSZ-L": cusz_l,
     "cuSZ-I": cusz_i,
     "cuSZp2-like": cuszp2_like,
@@ -53,7 +55,10 @@ def run_case(comp_factory, eb: float, x: np.ndarray) -> dict:
     y = c.decompress(buf)
     t2 = time.time()
     rng = float(x.max() - x.min())
+    plan = getattr(c, "last_plan", None)
     return {
+        "predictor": c.spec.predictor,
+        "plan": None if plan is None else str(plan),
         "cr": compression_ratio(x, buf),
         "psnr": psnr(x, y),
         "maxerr_rel": max_abs_err(x, y) / max(rng, 1e-30),

@@ -33,7 +33,6 @@ def run(*, full: bool = False, data_dir: str | None = None, datasets=("nyx",), e
 
         c = Compressor(CompressorSpec(eb=1e-3, pipeline="none", autotune=False))
         buf = c.compress(x)
-        import json
 
         from repro.core.compressor import _sections_unpack
 

@@ -1,7 +1,6 @@
 """Figure 8: rate-distortion (bitrate vs decompression PSNR) curves."""
 from __future__ import annotations
 
-from repro.core import bit_rate
 
 from .common import COMPRESSORS, get_data, run_case
 

@@ -7,6 +7,7 @@ Increments (paper order):
   +reorder     : level-grouped code mapping (Eq. 3)
   +md+autotune : multi-dimensional interpolation + per-level auto-tuning
   cusz-hi-cr   : full open-source CR lossless pipeline
+  +plan        : plan-driven predictor (spline x ordering x stride planner)
 """
 from __future__ import annotations
 
@@ -27,6 +28,7 @@ _STEPS = [
                                     reorder=True), True),
     ("cusz-hi-cr", CompressorSpec(predictor="interp", pipeline="cr", anchor_stride=16, autotune=True,
                                   reorder=True), False),
+    ("+plan", CompressorSpec(predictor="auto", pipeline="cr", reorder=True), False),
     ("cusz-hi-crz(beyond)", CompressorSpec(predictor="interp", pipeline="crz", anchor_stride=16, autotune=True,
                                            reorder=True), False),
 ]

@@ -3,10 +3,13 @@
 A 3-D simulation field is sharded tile-per-device (data-parallel); every
 device compresses its tile independently (the 17^3 block design needs no
 halo exchange — DESIGN.md §3), and the host writes one container per tile
-plus a manifest. The compressor runs with ``pipeline="auto"``: the
-orchestrator samples each tile's quantization-code stream and records the
-best-fit lossless pipeline per tile in its container header. Run with fake
-devices to see the multi-device path:
+plus a manifest. The compressor runs fully orchestrated
+(``predictor="auto"`` + ``pipeline="auto"``): the planner tunes the
+per-level interpolation (spline/scheme/anchor stride) per tile, the
+orchestrator samples each tile's quantization-code stream, and both
+choices — the ``PredictorPlan`` and the best-fit lossless pipeline — are
+recorded per tile in its container header (``Compressor.inspect``). Run
+with fake devices to see the multi-device path:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/compress_field.py
@@ -17,7 +20,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import Compressor, compression_ratio, cusz_hi_auto, max_abs_err
+from repro.core import Compressor, PredictorPlan, compression_ratio, cusz_hi_autoplan, max_abs_err
 from repro.data import get_field
 
 devices = jax.devices()
@@ -26,15 +29,20 @@ field = get_field("jhtdb")[:128]  # (128, 256, 256)
 tiles = np.array_split(field, n, axis=0)
 print(f"devices={n}, field {field.shape}, tile ~{tiles[0].shape}")
 
-comp = cusz_hi_auto(eb=1e-3)
+comp = cusz_hi_autoplan(eb=1e-3)
 t0 = time.time()
 blobs = [comp.compress(np.ascontiguousarray(t)) for t in tiles]  # per-device tiles
 dt = time.time() - t0
+
+
+def _tile_entry(t, b):
+    hdr = Compressor.inspect(b)
+    plan = PredictorPlan.from_header(hdr["pplan"])
+    return {"shape": list(t.shape), "bytes": len(b), "pipeline": hdr["pipeline"], "plan": str(plan)}
+
+
 manifest = {
-    "tiles": [
-        {"shape": list(t.shape), "bytes": len(b), "pipeline": Compressor.inspect(b)["pipeline"]}
-        for t, b in zip(tiles, blobs)
-    ],
+    "tiles": [_tile_entry(t, b) for t, b in zip(tiles, blobs)],
     "total_cr": field.nbytes / sum(len(b) for b in blobs),
 }
 print(json.dumps(manifest, indent=1))

@@ -2,8 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 from repro.core import compression_ratio, cusz_hi_cr, cusz_hi_tp, max_abs_err, psnr
 from repro.data import get_field
 

@@ -5,15 +5,18 @@ Two modes per tensor:
     anything integer/small) — falls back to stdlib zlib when the optional
     ``zstandard`` package is absent, and records which codec was used in
     the manifest so restore dispatches correctly;
-  * error-bounded: the paper's full pipeline (interp predictor +
-    orchestrated ``pipeline="auto"`` lossless stack) on float tensors
-    reshaped to a 2-D field — weights are not spatially smooth like
-    simulation data, so the orchestrator picks the best-fit registered
-    pipeline per tensor; CR is reported honestly in the manifest.
+  * error-bounded: the paper's full pipeline (plan-driven ``predictor=
+    "auto"`` interpolation + orchestrated ``pipeline="auto"`` lossless
+    stack) on float tensors reshaped to a 2-D field — weights are not
+    spatially smooth like simulation data, so both tuners pick the
+    best-fit configuration per tensor; CR is reported honestly in the
+    manifest.
 
-The pipeline name used at encode time is recorded in the tensor meta and
-decode dispatches from it, so checkpoints written under an older default
-(e.g. the previous hardcoded "tp") keep restoring after a default change.
+The pipeline name and the chosen ``PredictorPlan`` are recorded in the
+tensor meta (the plan also lives in the container header, which is what
+decode actually replays), so checkpoints written under an older default
+(e.g. the previous hardcoded "tp" pipeline, or the fixed cubic/md steps)
+keep restoring after a default change.
 """
 from __future__ import annotations
 
@@ -53,11 +56,13 @@ def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
     if eb > 0 and x.dtype in (np.float32, np.float64) and x.size >= 4096:
         # portable candidates only: a checkpoint must restore on machines
         # without the optional codecs installed here (e.g. zstandard)
-        comp = Compressor(CompressorSpec(eb=eb, pipeline=_EB_PIPELINE, autotune=False,
+        comp = Compressor(CompressorSpec(eb=eb, predictor="auto", pipeline=_EB_PIPELINE,
                                          pipeline_candidates=tuple(portable_pipelines())))
         field = _as_field(x.astype(np.float32))
         payload = comp.compress(field)
-        meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape), pipeline=_EB_PIPELINE)
+        plan = comp.last_plan  # same dict the container header carries, no re-parse
+        meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape), pipeline=_EB_PIPELINE,
+                    predictor="auto", plan=None if plan is None else plan.to_header())
         return payload, meta
     raw = np.ascontiguousarray(x).tobytes()
     if zstandard is not None:

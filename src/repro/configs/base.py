@@ -118,8 +118,6 @@ def param_count(cfg: ModelConfig) -> int:
     """Approximate parameter count (embedding + blocks), for roofline math."""
     d, ff, V = cfg.d_model, cfg.d_ff, cfg.vocab
     H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    per_layer = {}
-    n_attn = n_local = n_ssm = n_rglru = 0
     layers = [cfg.pattern[i % len(cfg.pattern)] for i in range(cfg.n_layers)]
     attn_p = d * (H * dh) + 2 * d * (Hk * dh) + (H * dh) * d
     mlp_p = 3 * d * ff if cfg.act == "silu" else 2 * d * ff

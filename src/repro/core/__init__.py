@@ -1,8 +1,10 @@
 """repro.core — cuSZ-Hi: synergistic lossy-lossless compression in JAX."""
+from .autotune import PredictorPlan, autotune_plan  # noqa: F401
 from .compressor import (  # noqa: F401
     Compressor,
     CompressorSpec,
     cusz_hi_auto,
+    cusz_hi_autoplan,
     cusz_hi_cr,
     cusz_hi_crz,
     cusz_hi_tp,

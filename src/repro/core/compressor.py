@@ -5,6 +5,19 @@ jit/Pallas) -> scatter codes -> level-reorder (Eq.3) -> lossless pipeline
 -> container with anchors + outliers.  decompress() replays the identical
 arithmetic from the codes.
 
+The lossy seam mirrors the lossless one: ``CompressorSpec.predictor``
+accepts ``"auto"``, which runs the per-level planner
+(repro.core.autotune.autotune_plan) over sampled anchor blocks — candidate
+splines (linear / cubic / natural-cubic), interpolation schemes ("md" vs
+per-dimension sequential orderings) and anchor strides, scored by
+quantized-residual entropy through the same stream_stats cost model the
+lossless orchestrator uses. The winning ``PredictorPlan`` drives the step
+tables (jax and Pallas backends alike) and is serialized into the
+container v2 header as the (anchor_stride, splines, schemes) fields —
+zero overhead over a fixed spec; ``Compressor.inspect`` surfaces it as
+``pplan``. v1/v2 containers without recorded splines/schemes decode with
+the default cubic/md steps.
+
 The lossless seam rides the stage registry (repro.core.lossless.stages /
 pipelines): ``CompressorSpec.pipeline`` names any registered pipeline
 (CR: hf-rre4-tcms8-rze1 / TP: tcms1-bit1-rre1 / ...), and ``"auto"``
@@ -54,27 +67,28 @@ import numpy as np
 
 from . import blocks as blk
 from . import lorenzo as lor
-from .autotune import autotune
+from .autotune import DEFAULT_STRIDES, autotune, autotune_plan, levels_for_stride
 from .lossless import orchestrate, pipelines
 from .lossless.flenc import fl_decode, fl_encode
 from .predictor import compress_blocks, decompress_blocks
 from .reorder import reorder_codes_batch, restore_codes_batch
 from .serial import pack_obj, unpack_obj
-from .stencils import build_steps
+from .stencils import SPLINES, build_steps
 
 MAGIC_V1 = b"CSZH1\n"
 MAGIC = b"CSZH2\n"
 
-_PREDICTORS = ("interp", "lorenzo", "offset1d")
+_PREDICTORS = ("interp", "auto", "lorenzo", "offset1d")
 _BACKENDS = ("jax", "pallas")
 _EB_MODES = ("rel", "abs")
+_ANCHOR_STRIDES = (4, 8, 16)  # power-of-two strides the 17^ndim block supports
 
 
 @dataclasses.dataclass(frozen=True)
 class CompressorSpec:
     eb: float = 1e-3
     eb_mode: str = "rel"                  # "rel": eb * value range (paper); "abs"
-    predictor: str = "interp"             # interp | lorenzo | offset1d
+    predictor: str = "interp"             # interp | auto (plan-driven) | lorenzo | offset1d
     pipeline: str = "cr"                  # any registered pipeline, or "auto"
     anchor_stride: int = 16               # 16 = cuSZ-Hi; 8 = cuSZ-I layout
     autotune: bool = True
@@ -86,6 +100,8 @@ class CompressorSpec:
     # orchestrate.portable_pipelines() for artifacts that must restore on any
     # machine. None = every registered pipeline.
     pipeline_candidates: tuple | None = None
+    # predictor="auto" only: anchor strides the planner explores.
+    plan_anchor_strides: tuple = DEFAULT_STRIDES
 
     def __post_init__(self):
         if self.pipeline != "auto" and self.pipeline not in pipelines.PIPELINES:
@@ -93,6 +109,8 @@ class CompressorSpec:
                 f"unknown pipeline {self.pipeline!r}; registered pipelines: "
                 f"{', '.join(sorted(pipelines.PIPELINES))} (or 'auto')"
             )
+        if self.pipeline_candidates is not None and not self.pipeline_candidates:
+            raise ValueError("pipeline_candidates must be None or a non-empty sequence of pipeline names")
         for nm in self.pipeline_candidates or ():
             pipelines.get_pipeline(nm)  # raises with the registered list
         if self.predictor not in _PREDICTORS:
@@ -101,14 +119,19 @@ class CompressorSpec:
             raise ValueError(f"unknown backend {self.backend!r}; one of {_BACKENDS}")
         if self.eb_mode not in _EB_MODES:
             raise ValueError(f"unknown eb_mode {self.eb_mode!r}; one of {_EB_MODES}")
+        for st in (self.anchor_stride,) + tuple(self.plan_anchor_strides):
+            if st not in _ANCHOR_STRIDES:
+                raise ValueError(f"unsupported anchor stride {st}; one of {_ANCHOR_STRIDES}")
+        for s in self.splines:
+            if s not in SPLINES:
+                raise ValueError(f"unknown spline {s!r}; one of {SPLINES}")
+        for s in self.schemes:
+            if s != "md" and s != "1d" and not s.startswith("1d-"):
+                raise ValueError(f"unknown scheme {s!r}; 'md', '1d', or '1d-<perm>'")
 
     @property
     def levels(self) -> tuple:
-        lv, s = [], self.anchor_stride // 2
-        while s >= 1:
-            lv.append(s)
-            s //= 2
-        return tuple(lv)
+        return levels_for_stride(self.anchor_stride)
 
 
 def _sections_pack(header: dict, sections: list[bytes]) -> bytes:
@@ -165,6 +188,10 @@ def _sections_unpack(buf: bytes):
 class Compressor:
     def __init__(self, spec: CompressorSpec | None = None, **kw):
         self.spec = spec or CompressorSpec(**kw)
+        # Filled by the last predictor="auto" compress(): the winning
+        # PredictorPlan with its scored alternatives (observability only;
+        # the container header records everything decode needs).
+        self.last_plan = None
 
     # ------------------------------------------------------------------ utils
     def _abs_eb(self, x: np.ndarray) -> float:
@@ -194,7 +221,7 @@ class Compressor:
         }
         if eb_abs == 0.0:  # constant field (or degenerate): store verbatim min
             return _sections_pack(dict(base_hdr, mode="const"), [np.float32(x.reshape(-1)[0] if x.size else 0).tobytes()])
-        if sp.predictor == "interp":
+        if sp.predictor in ("interp", "auto"):
             return self._compress_interp(x, eb_abs, base_hdr)
         if sp.predictor == "lorenzo":
             return self._compress_lorenzo(x, eb_abs, base_hdr)
@@ -228,9 +255,23 @@ class Compressor:
 
     @staticmethod
     def inspect(buf: bytes) -> dict:
-        """Container header + section sizes, without decompressing."""
+        """Container header + section sizes, without decompressing.
+
+        Plan-driven containers (``predictor="auto"``) additionally expose
+        the winning :class:`~repro.core.autotune.PredictorPlan` under
+        ``pplan`` — assembled from the serialized header fields, which is
+        why a plan costs the container nothing over a fixed spec.
+        """
         header, sections = _sections_unpack(buf)
-        return dict(header, section_bytes=[len(s) for s in sections])
+        out = dict(header, section_bytes=[len(s) for s in sections])
+        if header.get("mode") == "interp" and header.get("predictor") == "auto" and "splines" in header:
+            out["pplan"] = {
+                "ndim": len(header["padded"]),
+                "anchor_stride": int(header["anchor_stride"]),
+                "splines": list(header["splines"]),
+                "schemes": list(header["schemes"]),
+            }
+        return out
 
     def _run_predictor(self, blocks: np.ndarray, eb_abs: float, steps, stride: int, ndim: int):
         """Dispatch the fused predict+quantize over the whole block batch."""
@@ -247,15 +288,25 @@ class Compressor:
         xb, spatial = self._spatial_view(x)
         ndim = len(spatial)
         batch = xb.shape[0]
-        stride = sp.anchor_stride
         padded = blk.pad_field_batch(xb, blk.ANCHOR_STRIDE)
         padded_shapes = padded.shape[1:]
         blocks = blk.gather_blocks_batch(padded, blk.ANCHOR_STRIDE)
-        if sp.autotune:
-            splines, schemes = autotune(blocks, 2.0 * eb_abs, sp.levels, stride)
+        plan = None
+        if sp.predictor == "auto":
+            plan = autotune_plan(blocks, 2.0 * eb_abs, tuple(sp.plan_anchor_strides),
+                                 field_shape=(batch,) + tuple(padded_shapes),
+                                 trial_pipeline=sp.pipeline if sp.pipeline != "auto" else "cr",
+                                 reorder=sp.reorder)
+            self.last_plan = plan
+            stride, levels = plan.anchor_stride, plan.levels
+            splines, schemes = plan.splines, plan.schemes
         else:
-            splines, schemes = tuple(sp.splines[: len(sp.levels)]), tuple(sp.schemes[: len(sp.levels)])
-        steps = build_steps(ndim, blk.BLOCK, sp.levels, splines, schemes)
+            stride, levels = sp.anchor_stride, sp.levels
+            if sp.autotune:
+                splines, schemes = autotune(blocks, 2.0 * eb_abs, levels, stride)
+            else:
+                splines, schemes = tuple(sp.splines[: len(levels)]), tuple(sp.schemes[: len(levels)])
+        steps = build_steps(ndim, blk.BLOCK, levels, splines, schemes)
         codes_b, outl_b = self._run_predictor(blocks, eb_abs, steps, stride, ndim)
         cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
         ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
@@ -267,6 +318,7 @@ class Compressor:
         header = dict(
             base_hdr,
             mode="interp",
+            anchor_stride=int(stride),  # may differ from the spec under a plan
             padded=list(padded_shapes),
             batch=int(batch),
             splines=list(splines),
@@ -275,10 +327,13 @@ class Compressor:
             n_outliers=int(oi.size),
             **penc,
         )
+        # No separate plan blob: the plan IS (anchor_stride, splines, schemes),
+        # already serialized above — zero container overhead vs a fixed spec.
+        # Compressor.inspect reassembles the "pplan" view from those fields;
+        # the full diagnostics (scores, candidates) stay on self.last_plan.
         return _sections_pack(header, [payload, anc.tobytes(), oi.tobytes(), ov.tobytes()])
 
     def _compress_lorenzo(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
-        sp = self.spec
         xb, spatial = self._spatial_view(x)
         twoeb = jnp.float32(2.0 * eb_abs)
         codes, outl, cfull, _ = lor.lorenzo_encode(jnp.asarray(xb), twoeb, len(spatial))
@@ -325,7 +380,12 @@ class Compressor:
         ov = np.frombuffer(sections[3], np.float32)
         psize = int(np.prod(padded_shapes))
         anc_shape = tuple((d - 1) // stride + 1 for d in padded_shapes)
-        steps = build_steps(ndim, blk.BLOCK, tuple(CompressorSpec(anchor_stride=stride).levels), tuple(header["splines"]), tuple(header["schemes"]))
+        levels = levels_for_stride(stride)
+        # Containers that predate recorded step tables (or hand-rolled v1
+        # headers without them) decode with the default cubic/md hierarchy.
+        splines = tuple(header.get("splines", ("cubic",) * len(levels)))
+        schemes = tuple(header.get("schemes", ("md",) * len(levels)))
+        steps = build_steps(ndim, blk.BLOCK, levels, splines, schemes)
         cgrid = restore_codes_batch(seq, batch, padded_shapes, fill=128, dtype=np.uint8,
                                     stride=stride, reorder=header.get("reorder", True))
         agrid = blk.place_anchors_batch(padded_shapes, anc.reshape((batch,) + anc_shape), stride)
@@ -357,6 +417,12 @@ class Compressor:
 def cusz_hi_auto(eb=1e-3, **kw) -> Compressor:
     """Orchestrated mode: per-field best-fit lossless pipeline (§5.2)."""
     return Compressor(CompressorSpec(eb=eb, pipeline="auto", **kw))
+
+
+def cusz_hi_autoplan(eb=1e-3, **kw) -> Compressor:
+    """Fully synergistic mode: plan-driven predictor (per-level spline/scheme/
+    stride autotuning, §5.1.3) + per-field best-fit lossless pipeline (§5.2)."""
+    return Compressor(CompressorSpec(eb=eb, predictor="auto", pipeline="auto", **kw))
 
 
 def cusz_hi_cr(eb=1e-3, **kw) -> Compressor:

@@ -70,6 +70,12 @@ register_pipeline("fz", ("bit1", "rre1"))
 # beyond-paper: CR pipeline with an open-source zstd tail (replaces the
 # role Bitcomp plays for cuSZ-IB, without the proprietary dependency)
 register_pipeline("crz", ("hf", "rre4", "tcms8", "rze1", "zstd"))
+# bit1-first variant: bit-plane shuffle up front so the run-reduction sees
+# plane-major redundancy, Huffman mops up the survivors
+register_pipeline("fzh", ("bit1", "rre1", "hf"))
+# per-level variant: run-reduction before the entropy coder — tuned for the
+# level-reordered code stream, whose fine-level tail is long same-code runs
+register_pipeline("lvl", ("rre4", "hf", "rze1"))
 
 
 def _resolve(pipeline) -> tuple:

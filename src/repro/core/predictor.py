@@ -39,6 +39,20 @@ def _predict(recon: jnp.ndarray, step: Step) -> jnp.ndarray:
     return pred
 
 
+def quantize_pred(orig, pred, twoeb, inv2eb):
+    """The quantizer: (code u8-valued i32 with 0 = outlier, outlier mask,
+    feedback reconstruction). Single source of truth for the arithmetic —
+    the engine below, the autotuner's trial passes, and the Pallas kernel
+    all call this, so their code streams stay bit-identical.
+    """
+    q = jnp.rint((orig - pred) * inv2eb)
+    outl = jnp.abs(q) > RADIUS
+    rec = jnp.where(outl, orig, pred + q * twoeb)
+    qi = jnp.clip(q, -RADIUS - 1, RADIUS + 1).astype(jnp.int32)  # safe cast; outliers coded 0
+    code = jnp.where(outl, 0, qi + CENTER)
+    return code, outl, rec
+
+
 def _anchor_mask(spatial: tuple[int, ...], anchor_every: int) -> np.ndarray:
     m = np.zeros(spatial, bool)
     sl = tuple(slice(None, None, anchor_every) for _ in spatial)
@@ -62,13 +76,10 @@ def compress_blocks(blocks: jnp.ndarray, twoeb: jnp.ndarray, steps: tuple[Step, 
     inv2eb = 1.0 / twoeb
     for step in steps:
         pred = _predict(recon, step)
-        q = jnp.rint((orig - pred) * inv2eb)
-        outl = jnp.abs(q) > RADIUS
-        rec = jnp.where(outl, orig, pred + q * twoeb)
+        code, outl, rec = quantize_pred(orig, pred, twoeb, inv2eb)
         m = jnp.asarray(step.mask)
         recon = jnp.where(m, rec, recon)
-        qi = jnp.clip(q, -RADIUS - 1, RADIUS + 1).astype(jnp.int32)  # safe cast; outliers masked below
-        codes = jnp.where(m, jnp.where(outl, 0, qi + CENTER), codes)
+        codes = jnp.where(m, code, codes)
         outl_all = outl_all | (m & outl)
     return codes.astype(jnp.uint8), outl_all, recon
 

@@ -9,16 +9,23 @@ blend-weight grid, and a static target mask.
 
 Splines (SZ3/QoZ family, §5.1.2):
   cubic centred  (-1, 9, 9, -1)/16          at (c-3s, c-s, c+s, c+3s)
+  natural cubic  (-3, 23, 23, -3)/40        at (c-3s, c-s, c+s, c+3s)
   quad  asym     (3, 6, -1)/8               at (c-s, c+s, c+3s)   [left edge]
                  (-1, 6, 3)/8               at (c-3s, c-s, c+s)   [right edge]
   linear         (1, 1)/2                   at (c-s, c+s)
+
+The natural-cubic weights are the QoZ/HPEZ "natural spline" variant; both
+cubics share the quadratic/linear edge fallbacks, so either is usable at
+every level.
 
 Multi-dimensional scheme: at each level, sub-step m predicts the points with
 exactly m "odd" coordinates by averaging the 1-D interpolations along those
 odd dims — restricted to the dims whose stencil order is maximal ("only
 prediction values with the highest spline order will be used and averaged").
 1-D-sequence scheme: classic SZ3 pass per dim (dim d odd; later dims even;
-earlier dims anything).
+earlier dims anything). ``"1d"`` sweeps dims in natural order; ``"1d-<perm>"``
+(e.g. ``"1d-210"``) sweeps them in the given permutation — the sequential
+orderings the per-level autotuner searches over.
 """
 from __future__ import annotations
 
@@ -28,25 +35,54 @@ import functools
 import numpy as np
 
 CUBIC = ((-3, -1.0 / 16), (-1, 9.0 / 16), (1, 9.0 / 16), (3, -1.0 / 16))
+NAT_CUBIC = ((-3, -3.0 / 40), (-1, 23.0 / 40), (1, 23.0 / 40), (3, -3.0 / 40))
 QUAD_L = ((-3, -1.0 / 8), (-1, 6.0 / 8), (1, 3.0 / 8))
 QUAD_R = ((-1, 3.0 / 8), (1, 6.0 / 8), (3, -1.0 / 8))
 LINEAR = ((-1, 0.5), (1, 0.5))
 
-SPLINES = ("linear", "cubic")
+_FULL_STENCILS = {"cubic": CUBIC, "natural-cubic": NAT_CUBIC}
+
+SPLINES = ("linear", "cubic", "natural-cubic")
 SCHEMES = ("1d", "md")
 LEVELS = (8, 4, 2, 1)  # anchor stride 16 -> 4-level hierarchy (paper §5.1.1)
 
 
+def scheme_dims(scheme: str, ndim: int) -> tuple[int, ...] | None:
+    """Sweep order of a sequential scheme, or None for the "md" scheme.
+
+    Raises ValueError for malformed scheme names (the error lists the valid
+    forms) so typos fail before any step table is built.
+    """
+    if scheme == "md":
+        return None
+    if scheme == "1d":
+        return tuple(range(ndim))
+    if scheme.startswith("1d-"):
+        try:
+            dims = tuple(int(ch) for ch in scheme[3:])
+        except ValueError:
+            dims = ()
+        if sorted(dims) == list(range(ndim)):
+            return dims
+    raise ValueError(
+        f"unknown scheme {scheme!r} for ndim={ndim}; expected 'md', '1d', or "
+        f"'1d-<perm of 0..{ndim - 1}>' (e.g. '1d-{''.join(map(str, reversed(range(ndim))))}')"
+    )
+
+
 def interp_matrix(B: int, s: int, spline: str) -> tuple[np.ndarray, np.ndarray]:
     """(B,B) row-operator + per-coordinate stencil order (3=cubic,2=quad,1=linear)."""
+    if spline not in SPLINES:
+        raise ValueError(f"unknown spline {spline!r}; one of {SPLINES}")
+    full = _FULL_STENCILS.get(spline)
     M = np.zeros((B, B), np.float32)
     order = np.zeros(B, np.int32)
     for c in range(s, B, 2 * s):
-        if spline == "cubic" and c - 3 * s >= 0 and c + 3 * s <= B - 1:
-            stencil, order[c] = CUBIC, 3
-        elif spline == "cubic" and c + 3 * s <= B - 1:
+        if full is not None and c - 3 * s >= 0 and c + 3 * s <= B - 1:
+            stencil, order[c] = full, 3
+        elif full is not None and c + 3 * s <= B - 1:
             stencil, order[c] = QUAD_R, 2
-        elif spline == "cubic" and c - 3 * s >= 0:
+        elif full is not None and c - 3 * s >= 0:
             stencil, order[c] = QUAD_L, 2
         else:
             stencil, order[c] = LINEAR, 1
@@ -110,17 +146,16 @@ def build_steps(
                         mats.append(M)
                         wts.append(w)
                 steps.append(Step(s, tuple(dims), tuple(mats), tuple(wts), mask))
-        elif scheme == "1d":
-            for d in range(ndim):
+        else:
+            sweep = scheme_dims(scheme, ndim)  # raises on malformed names
+            for i, d in enumerate(sweep):
                 mask = on_lattice & odd[d]
-                for e in range(d + 1, ndim):
-                    mask &= ~odd[e]  # later dims still even at this level
+                for e in sweep[i + 1 :]:
+                    mask &= ~odd[e]  # dims later in the sweep still even at this level
                 if not mask.any():
                     continue
                 w = mask.astype(np.float32)
                 steps.append(Step(s, (d,), (M,), (w,), mask))
-        else:
-            raise ValueError(f"unknown scheme {scheme!r}")
     # Invariant (full hierarchies only): every non-anchor point covered once.
     if levels and levels[0] * 2 - 1 <= B and 1 in levels:
         cover = np.zeros((B,) * ndim, np.int32)

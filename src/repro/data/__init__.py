@@ -1,2 +1,2 @@
-from .fields import DATASETS, get_field, load_or_generate  # noqa: F401
+from .fields import DATASETS, get_field, load_or_generate, predictor_suite  # noqa: F401
 from .synthetic import Prefetcher, TokenPipeline  # noqa: F401

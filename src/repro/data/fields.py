@@ -50,3 +50,22 @@ def load_or_generate(name: str, data_dir: str | None = None, seed: int = 0) -> n
             if f.suffix in (".f32", ".dat", ".bin"):
                 return np.fromfile(f, np.float32).reshape(DATASETS[name][0])
     return get_field(name, seed)
+
+
+def predictor_suite(side: int = 48) -> dict:
+    """Synthetic field suite for the predictor-autotuning dimension: one
+    stream class per regime a spline/scheme/stride choice discriminates
+    (smooth spectra, exact ramps, axis anisotropy, additive noise,
+    sparse impulses). Shared by benchmarks.bench_lossless and the
+    auto-vs-fixed CR-floor tests so the gate always matches the
+    published suite."""
+    rng = np.random.default_rng(11)
+    g = np.stack(np.meshgrid(*[np.linspace(0, 1, side)] * 3, indexing="ij"))
+    smooth = (np.sin(g[0] * 6.3) * np.cos(g[1] * 5.1) + 0.5 * np.sin(g[2] * 9.9 + g[0] * 3)).astype(np.float32)
+    return {
+        "smooth": smooth,
+        "ramp": (2.0 * g[0] - 0.7 * g[1] + 0.3 * g[2]).astype(np.float32),
+        "aniso": (np.sin(g[0] * 40.0) + 0.01 * g[1] + 0.01 * g[2]).astype(np.float32),
+        "noisy": (smooth + 0.05 * rng.standard_normal((side,) * 3)).astype(np.float32),
+        "sparse": np.where(rng.random((side,) * 3) < 0.01, rng.standard_normal((side,) * 3), 0.0).astype(np.float32),
+    }

@@ -10,7 +10,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 BLOCK = 1024     # bytes per shuffle block

@@ -1,2 +1,2 @@
-from .ops import compress_blocks_pallas  # noqa: F401
+from .ops import compress_blocks_pallas, compress_blocks_pallas_plan  # noqa: F401
 from .ref import compress_blocks_ref  # noqa: F401

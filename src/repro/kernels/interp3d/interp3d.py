@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.predictor import CENTER, RADIUS, _anchor_mask
+from repro.core.predictor import CENTER, _anchor_mask, quantize_pred
 from repro.core.stencils import Step
 
 LANES = 128
@@ -70,13 +70,10 @@ def _kernel(blocks_ref, twoeb_ref, mats_ref, wts_ref, masks_ref, codes_ref, outl
         pred = jnp.zeros_like(recon)
         for d, oi in ops:
             pred = pred + wts_ref[oi][..., None] * _einsum_axis(mats_ref[oi], recon, d)
-        q = jnp.rint((orig - pred) * inv2eb)
-        is_out = jnp.abs(q) > RADIUS
-        rec = jnp.where(is_out, orig, pred + q * twoeb)
+        code, is_out, rec = quantize_pred(orig, pred, twoeb, inv2eb)  # shared quantizer
         m = masks_ref[k + 1][..., None] != 0
         recon = jnp.where(m, rec, recon)
-        qi = jnp.clip(q, -RADIUS - 1, RADIUS + 1).astype(jnp.int32)
-        codes = jnp.where(m, jnp.where(is_out, 0, qi + CENTER), codes)
+        codes = jnp.where(m, code, codes)
         outl = outl | (m & is_out)
     codes_ref[...] = codes.astype(jnp.uint8)
     outl_ref[...] = outl.astype(jnp.uint8)

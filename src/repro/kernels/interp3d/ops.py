@@ -34,3 +34,10 @@ def compress_blocks_pallas(blocks: np.ndarray, twoeb: float, steps, anchor_every
     codes, outl, recon = interp3d_compress(bt, jnp.float32(twoeb), steps, anchor_every, interpret)
     mv = lambda a: np.moveaxis(np.asarray(a), -1, 0)[:nb]
     return mv(codes), mv(outl).astype(bool), mv(recon)
+
+
+def compress_blocks_pallas_plan(blocks: np.ndarray, twoeb: float, plan, interpret: bool | None = None):
+    """Plan-driven kernel entry: step tables and anchor stride come from a
+    ``repro.core.autotune.PredictorPlan`` (interpret and compiled modes both
+    honour the plan — pack_steps stacks whatever hierarchy it describes)."""
+    return compress_blocks_pallas(blocks, twoeb, plan.steps(blocks.shape[1]), plan.anchor_stride, interpret)

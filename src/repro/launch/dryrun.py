@@ -32,7 +32,7 @@ import jax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import LONG_CONTEXT_OK, SHAPES, cells, get_config
+from repro.configs import SHAPES, cells, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
 from repro.runtime import partitioning as part

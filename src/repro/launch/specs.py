@@ -13,7 +13,6 @@ import jax.numpy as jnp
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ModelConfig
 from repro.models import init_cache, init_params
-from repro.optim import init_opt
 from repro.runtime.steps import TrainState, make_train_state
 
 

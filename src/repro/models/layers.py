@@ -6,13 +6,11 @@ matching init_* functions. Compute dtype is bf16, accumulation fp32.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig

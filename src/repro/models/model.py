@@ -16,7 +16,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -333,7 +332,6 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int | None = None):
     x = _embed_inputs(params, cfg, batch)
     S = x.shape[1]
     C = cache_len or S
-    aux_prefix = []
 
     def block_prefill(x, p, kind):
         h = rms_norm(x, p["ln1"], cfg.norm_eps)

@@ -7,7 +7,6 @@ arch runs the long_500k cell that full attention cannot.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

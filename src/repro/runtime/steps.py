@@ -9,7 +9,6 @@ running inside jax.shard_map manual over the 'pod' axis only.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -18,10 +17,9 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, forward, init_cache, init_params, loss_fn, prefill
-from repro.optim import adamw_update, clip_by_global_norm, init_opt, pod_allreduce_compressed
+from repro.models import decode_step, init_params, loss_fn, prefill
+from repro.optim import adamw_update, clip_by_global_norm, init_opt
 from repro.optim.adamw import OptState
-from repro.runtime import partitioning as part
 from repro.runtime import sharding_rules as rules_mod
 
 

@@ -1,10 +1,7 @@
 """Checkpoint manager: atomicity, lossless/lossy modes, async, restore."""
-import json
-import os
 import pathlib
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,6 +1,5 @@
 """Multi-device behaviour on fake CPU devices (subprocess: device count must
 be set before jax initializes — conftest keeps the main process at 1)."""
-import json
 import os
 import subprocess
 import sys
@@ -20,6 +19,7 @@ def _run(script: str, devices: int = 8, timeout=900):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

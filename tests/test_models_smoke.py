@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import ARCHS, get_config
 from repro.configs.base import active_param_count, param_count
-from repro.models import decode_step, forward, init_cache, init_params, loss_fn, prefill
+from repro.models import decode_step, forward, init_cache, init_params, prefill
 from repro.runtime.steps import make_train_state, make_train_step
 
 B, S = 2, 32
@@ -23,6 +23,7 @@ def _batch(sc, rng, seq=S):
     return batch
 
 
+@pytest.mark.slow  # ~1 min across the arch sweep, but it IS the smoke gate
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_forward_and_train_step(arch):
     sc = get_config(arch).scaled()

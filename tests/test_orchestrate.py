@@ -120,7 +120,18 @@ def test_auto_roundtrip_and_record(stream):
 def test_portable_pipelines_exclude_optional_codecs():
     portable = orc.portable_pipelines()
     assert "crz" not in portable  # zstd tail may need the optional package
-    assert {"cr", "tp", "hf", "fz", "none"} <= set(portable)
+    assert {"cr", "tp", "hf", "fz", "none", "fzh", "lvl"} <= set(portable)
+
+
+def test_roadmap_pipeline_variants_registered():
+    """The bit1-first and per-level variants promised in the ROADMAP
+    follow-up: registered, stage-valid, and in the orchestrator's
+    search space (the pipeline x stream sweeps above cover roundtrips)."""
+    assert pp.get_pipeline("fzh")[0] == "bit1"  # bit1-first
+    assert pp.get_pipeline("lvl")[0].startswith("rre")  # run-reduction first
+    data = STREAMS["sparse"]
+    _, record = orc.encode_auto(data)
+    assert {"fzh", "lvl"} <= set(record["trial_bytes"]) | set(record["estimates"])
 
 
 def test_encode_auto_small_stream_reuses_trial_encoding():

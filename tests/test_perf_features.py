@@ -12,6 +12,7 @@ from repro.models import decode_step, init_cache, init_params
 from repro.runtime.steps import make_train_state, make_train_step
 
 
+@pytest.mark.tier2  # ~80 s of token-by-token decode; heaviest test in the suite
 @pytest.mark.parametrize("arch", ["gemma3-12b", "yi-34b"])
 def test_kv_quant_decode_matches_exact(arch):
     cfg = get_config(arch).scaled()

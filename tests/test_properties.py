@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier2  # property sweeps are the slow tail of the gate
+
 pytest.importorskip("hypothesis", reason="optional dev dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st

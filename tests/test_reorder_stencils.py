@@ -27,7 +27,7 @@ def test_flat_permutation_sorted():
     assert (np.diff(perm) > 0).all()
 
 
-@pytest.mark.parametrize("spline", ["linear", "cubic"])
+@pytest.mark.parametrize("spline", ["linear", "cubic", "natural-cubic"])
 @pytest.mark.parametrize("s", [8, 4, 2, 1])
 def test_interp_matrix_partition_of_unity(spline, s):
     M, order = interp_matrix(17, s, spline)
@@ -38,7 +38,7 @@ def test_interp_matrix_partition_of_unity(spline, s):
 
 @pytest.mark.parametrize("ndim", [1, 2, 3])
 @pytest.mark.parametrize("scheme", ["md", "1d"])
-@pytest.mark.parametrize("spline", ["linear", "cubic"])
+@pytest.mark.parametrize("spline", ["linear", "cubic", "natural-cubic"])
 def test_step_coverage(ndim, scheme, spline):
     steps = build_steps(ndim, 17, (8, 4, 2, 1), (spline,) * 4, (scheme,) * 4)
     cover = np.zeros((17,) * ndim, np.int32)
@@ -54,6 +54,34 @@ def test_step_coverage(ndim, scheme, spline):
         anchors &= c % 16 == 0
     assert (cover[anchors] == 0).all()
     assert (cover[~anchors] == 1).all()
+
+
+@pytest.mark.parametrize("scheme", ["1d-210", "1d-120", "1d-021"])
+def test_sequential_ordering_coverage_and_distinct_masks(scheme):
+    """Every sweep permutation still tiles each level exactly once, and a
+    non-natural ordering really changes the per-step masks vs "1d"."""
+    steps = build_steps(3, 17, (8, 4, 2, 1), ("cubic",) * 4, (scheme,) * 4)
+    base = build_steps(3, 17, (8, 4, 2, 1), ("cubic",) * 4, ("1d",) * 4)
+    cover = np.zeros((17,) * 3, np.int32)
+    for st in steps:
+        cover += st.mask
+    coords = np.meshgrid(*([np.arange(17)] * 3), indexing="ij")
+    anchors = np.ones((17,) * 3, bool)
+    for c in coords:
+        anchors &= c % 16 == 0
+    assert (cover[anchors] == 0).all() and (cover[~anchors] == 1).all()
+    assert any(not np.array_equal(a.mask, b.mask) for a, b in zip(steps, base))
+
+
+def test_scheme_dims_validation():
+    from repro.core.stencils import scheme_dims
+
+    assert scheme_dims("md", 3) is None
+    assert scheme_dims("1d", 3) == (0, 1, 2)
+    assert scheme_dims("1d-210", 3) == (2, 1, 0)
+    for bad in ("1d-21", "1d-0122", "1d-ab", "zigzag"):
+        with pytest.raises(ValueError, match="scheme"):
+            scheme_dims(bad, 3)
 
 
 def test_exact_on_cubic_polynomial():
