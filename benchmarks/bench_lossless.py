@@ -15,6 +15,14 @@ compressor on a smooth float32 field (after JIT warmup). Each timing is
 the best of ``--reps`` runs (timeit-style min-time, which rejects
 scheduler noise on shared hosts).
 
+``--devices N`` adds a sharded dimension: an (N, side^3) field compressed
+device-parallel through ``repro.core.distributed.shard_compress`` (one
+container-v3 frame per device shard) vs the host-sequential chunked
+writer, timed and CR-recorded like every other row. When jax initialized
+with fewer devices the script re-execs itself once with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (fake CPU devices;
+the flag must be set before jax starts).
+
 ``--smoke`` shrinks every grid (64 KiB streams, 24^3 fields, 1 rep) so CI
 can run the whole script in seconds and upload the JSON as an artifact.
 """
@@ -22,6 +30,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -171,7 +182,39 @@ def sweep_pipelines(data: np.ndarray, stream: str, reps: int) -> list[dict]:
     return rows
 
 
-def run(reps: int = 5, smoke: bool = False) -> dict:
+def sweep_sharded(devices: int, side: int, reps: int, eb: float = 1e-3) -> list[dict]:
+    """Device-parallel shard_compress vs the host-sequential chunked writer
+    on an (devices, side^3) field; one row per writer, pipeline=cr."""
+    import jax
+
+    from repro.core import chunk_compress, shard_compress, shard_decompress
+
+    base = smooth_field(side)
+    x = np.stack([(base * (1 + 0.05 * i)).astype(np.float32) for i in range(devices)])
+    spec = CompressorSpec(eb=eb, pipeline="cr", autotune=False)
+    buf = shard_compress(x, spec=spec)
+    y = shard_decompress(buf)
+    rng = float(x.max() - x.min())
+    assert max_abs_err(x, y) <= eb * rng * (1 + 1e-5) + 1e-9
+    cbuf = chunk_compress(x, n_chunks=devices, spec=spec)  # its own bytes: a
+    # chunk-writer size regression must not hide behind the sharded row's CR
+    te = _best(lambda: shard_compress(x, spec=spec), reps)
+    td = _best(lambda: shard_decompress(buf, workers=devices), reps)
+    tc = _best(lambda: chunk_compress(x, n_chunks=devices, spec=spec), reps)
+    common = {"pipeline": "cr", "devices": devices,
+              "jax_devices": jax.device_count(), "n_frames": devices}
+    return [
+        dict(common, stage=f"shard_compress:{devices}dev", stream=f"sharded-{devices}dev",
+             cr=x.nbytes / len(buf),
+             enc_mbps=x.nbytes / te / 1e6, dec_mbps=x.nbytes / td / 1e6),
+        dict(common, stage=f"chunk_compress:{devices}dev", stream=f"chunked-{devices}dev",
+             cr=x.nbytes / len(cbuf),
+             enc_mbps=x.nbytes / tc / 1e6,
+             dec_mbps=x.nbytes / _best(lambda: shard_decompress(cbuf), reps) / 1e6),
+    ]
+
+
+def run(reps: int = 5, smoke: bool = False, devices: int = 1) -> dict:
     stream_bytes = SMOKE_STREAM_BYTES if smoke else STREAM_BYTES
     field_side = SMOKE_FIELD_SIDE if smoke else FIELD_SIDE
     pred_side = SMOKE_FIELD_SIDE if smoke else PRED_FIELD_SIDE
@@ -187,6 +230,8 @@ def run(reps: int = 5, smoke: bool = False) -> dict:
         rows.extend(sweep_pipelines(sdata, stream, reps))
     for stream, field in synthetic_fields(pred_side).items():
         rows.extend(sweep_predictors(field, stream, reps))
+    if devices > 1:
+        rows.extend(sweep_sharded(devices, field_side, reps))
     # end-to-end compressor on a smooth field, warmed up (JIT + caches)
     x = smooth_field(field_side)
     comp = cusz_hi_cr(eb=1e-3)
@@ -209,6 +254,7 @@ def run(reps: int = 5, smoke: bool = False) -> dict:
     return {
         "bench": "lossless_hot_path",
         "smoke": bool(smoke),
+        "devices": int(devices),
         "stream_bytes": stream_bytes,
         "field": f"{field_side}^3 float32, eb=1e-3 rel",
         "pred_field": f"{pred_side}^3 float32, eb=1e-3 rel, pipeline=cr",
@@ -223,10 +269,27 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid for CI: 64 KiB streams, 24^3 fields, 1 rep")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="sharded dimension: shard_compress over N (fake CPU) devices")
     args = ap.parse_args(argv)
     if args.smoke:
         args.reps = min(args.reps, 1)
-    result = run(args.reps, smoke=args.smoke)
+    import jax
+
+    if args.devices > 1 and args.devices != jax.device_count() and os.environ.get("_BENCH_REEXEC") != "1":
+        # the device count must be fixed before jax initializes: re-exec once
+        # (also when jax has MORE devices — n % ndev would otherwise shunt the
+        # sharded row through the host-sequential fallback unnoticed).
+        # XLA honours the LAST occurrence of a repeated flag, so inherited
+        # device-count overrides are stripped, not merely prepended-around.
+        inherited = [f for f in os.environ.get("XLA_FLAGS", "").split()
+                     if not f.startswith("--xla_force_host_platform_device_count")]
+        env = dict(os.environ, _BENCH_REEXEC="1",
+                   XLA_FLAGS=" ".join([f"--xla_force_host_platform_device_count={args.devices}"]
+                                      + inherited))
+        return subprocess.run([sys.executable, os.path.abspath(__file__)]
+                              + (argv if argv is not None else sys.argv[1:]), env=env).returncode
+    result = run(args.reps, smoke=args.smoke, devices=args.devices)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for r in result["stages"]:
@@ -238,7 +301,8 @@ def main(argv=None):
             f"{tag:28s} enc {r['enc_mbps']:8.1f} MB/s   dec {r['dec_mbps']:8.1f} MB/s   CR {r['cr']:8.2f}{picked}"
         )
     print(f"-> {args.out}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""CR regression gate for CI (bench-smoke job).
+
+    PYTHONPATH=src python -m benchmarks.check_cr_regression \
+        --baseline BENCH_lossless_smoke.json --fresh bench_smoke.json
+
+Compares every (stream, pipeline) and (stream, predictor) cell of a fresh
+bench JSON against the committed baseline and fails (exit 1) if any
+cell's compression ratio dropped more than ``--max-drop-pct`` (default
+2%), or if a baseline cell vanished (a pipeline/predictor silently
+deregistered). Timing columns are ignored — MB/s is machine-dependent,
+CR is not: the synthetic streams are seeded and the arithmetic is
+deterministic, so a CR drop is a real codec regression, not noise.
+
+The two JSONs must come from the same grid (same ``smoke`` flag and
+stream sizes); comparing a smoke run against a full run would diff
+different workloads, so that is an error, not a pass.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def cell_key(row: dict) -> tuple | None:
+    """(kind, stream, name) for rows carrying a sweep dimension + CR."""
+    if "cr" not in row:
+        return None
+    for dim in ("pipeline", "predictor"):
+        if dim in row:
+            return (dim, row.get("stream", "-"), row[dim])
+    return None
+
+
+def cells(doc: dict) -> dict:
+    out = {}
+    for row in doc.get("stages", []):
+        key = cell_key(row)
+        if key is not None:
+            out[key] = float(row["cr"])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-drop-pct", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    for field in ("smoke", "stream_bytes"):
+        if base.get(field) != fresh.get(field):
+            print(f"GRID MISMATCH: {field} baseline={base.get(field)} fresh={fresh.get(field)} "
+                  "(the gate only compares like-for-like runs)")
+            return 1
+    bcells, fcells = cells(base), cells(fresh)
+    floor = 1.0 - args.max_drop_pct / 100.0
+    failures = []
+    for key, bcr in sorted(bcells.items()):
+        if key not in fcells:
+            failures.append(f"{key}: cell missing from fresh run (was CR {bcr:.3f})")
+            continue
+        fcr = fcells[key]
+        if fcr < bcr * floor:
+            failures.append(f"{key}: CR {bcr:.3f} -> {fcr:.3f} ({(fcr / bcr - 1) * 100:+.2f}%)")
+    kept = len(bcells) - len(failures)
+    print(f"CR gate: {kept}/{len(bcells)} cells within {args.max_drop_pct:g}% of baseline")
+    if failures:
+        print("REGRESSIONS:")
+        for f_ in failures:
+            print(" ", f_)
+        return 1
+    improved = sum(1 for k in bcells if k in fcells and fcells[k] > bcells[k])
+    print(f"({improved} cells improved; timing columns ignored by design)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

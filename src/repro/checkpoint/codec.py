@@ -12,14 +12,26 @@ Two modes per tensor:
     best-fit configuration per tensor; CR is reported honestly in the
     manifest.
 
+Error-bounded tensors are written as *chunked container v3 frames*
+(``mode="cuszhi3"``): the 2-D field is split along its leading axis into
+~``_FRAME_TARGET_BYTES`` chunks and each chunk becomes an independently
+decodable frame with its own plan + pipeline choice. With more than one
+jax device the frames are encoded device-parallel
+(:func:`repro.core.distributed.shard_compress`); either way
+:func:`encode_tensor_to` streams frames into the sink as they are
+produced, so the saver's fsync/writeback overlaps the encode of the next
+frame instead of waiting for the whole tensor.
+
 The pipeline name and the chosen ``PredictorPlan`` are recorded in the
 tensor meta (the plan also lives in the container header, which is what
 decode actually replays), so checkpoints written under an older default
-(e.g. the previous hardcoded "tp" pipeline, or the fixed cubic/md steps)
-keep restoring after a default change.
+(e.g. the previous hardcoded "tp" pipeline, the fixed cubic/md steps, or
+the pre-chunking single-container ``mode="cuszhi"``) keep restoring after
+a default change.
 """
 from __future__ import annotations
 
+import io
 import zlib
 
 import numpy as np
@@ -30,12 +42,14 @@ except ImportError:  # pragma: no cover - depends on the environment
     zstandard = None
 
 from repro.core import Compressor, CompressorSpec
+from repro.core import distributed as dist
 from repro.core.lossless import portable_pipelines
 
 _ZSTD_LEVEL = 3
 _ZLIB_LEVEL = 6
 _EB_PIPELINE = "auto"  # orchestrated per-tensor pipeline selection
 _LEGACY_EB_PIPELINE = "tp"  # checkpoints written before meta recorded the name
+_FRAME_TARGET_BYTES = 4 << 20  # ~4 MiB of raw field per v3 frame
 
 
 def _as_field(x: np.ndarray) -> np.ndarray:
@@ -50,32 +64,80 @@ def _as_field(x: np.ndarray) -> np.ndarray:
     return flat.reshape(-1, w) if w > 1 else flat.reshape(1, -1)
 
 
-def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
-    """eb = 0 -> lossless; eb > 0 -> value-range-relative error bound."""
+def _eb_compressor(eb: float) -> Compressor:
+    # portable candidates only: a checkpoint must restore on machines
+    # without the optional codecs installed here (e.g. zstandard)
+    return Compressor(CompressorSpec(eb=eb, predictor="auto", pipeline=_EB_PIPELINE,
+                                     pipeline_candidates=tuple(portable_pipelines())))
+
+
+def _n_frames(field: np.ndarray) -> int:
+    return int(max(1, min(field.shape[0], -(-field.nbytes // _FRAME_TARGET_BYTES))))
+
+
+class _CountingSink:
+    def __init__(self, f):
+        self._f = f
+        self.nbytes = 0
+
+    def write(self, b):
+        self._f.write(b)
+        self.nbytes += len(b)
+
+    def flush(self):
+        if hasattr(self._f, "flush"):
+            self._f.flush()
+
+
+def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0) -> dict:
+    """Encode ``x`` into file-like ``f``; returns the manifest meta (with
+    ``bytes``). eb = 0 -> lossless; eb > 0 -> value-range-relative bound.
+
+    The error-bounded path streams v3 frames into ``f`` as each chunk's
+    encode completes (see module docstring); the lossless path writes one
+    blob.
+    """
     meta = {"shape": list(x.shape), "dtype": str(x.dtype)}
+    sink = _CountingSink(f)
     if eb > 0 and x.dtype in (np.float32, np.float64) and x.size >= 4096:
-        # portable candidates only: a checkpoint must restore on machines
-        # without the optional codecs installed here (e.g. zstandard)
-        comp = Compressor(CompressorSpec(eb=eb, predictor="auto", pipeline=_EB_PIPELINE,
-                                         pipeline_candidates=tuple(portable_pipelines())))
+        comp = _eb_compressor(eb)
         field = _as_field(x.astype(np.float32))
-        payload = comp.compress(field)
-        plan = comp.last_plan  # same dict the container header carries, no re-parse
-        meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape), pipeline=_EB_PIPELINE,
-                    predictor="auto", plan=None if plan is None else plan.to_header())
-        return payload, meta
+        n_frames = _n_frames(field)
+        import jax
+
+        if jax.device_count() > 1 and field.shape[0] % jax.device_count() == 0:
+            # device-parallel frames: one shard per device
+            dist.shard_compress(field, compressor=comp, out=sink)
+            n_frames = jax.device_count()
+        else:
+            dist.chunk_compress(field, n_chunks=n_frames, compressor=comp, out=sink)
+        plan = comp.last_plan  # last frame's plan (full per-frame plans ride the container)
+        meta.update(mode="cuszhi3", eb=eb, field_shape=list(field.shape), pipeline=_EB_PIPELINE,
+                    predictor="auto", n_frames=n_frames, bytes=sink.nbytes,
+                    plan=None if plan is None else plan.to_header())
+        return meta
     raw = np.ascontiguousarray(x).tobytes()
     if zstandard is not None:
         meta.update(mode="zstd")
-        return zstandard.ZstdCompressor(level=_ZSTD_LEVEL).compress(raw), meta
-    meta.update(mode="zlib")
-    return zlib.compress(raw, _ZLIB_LEVEL), meta
+        sink.write(zstandard.ZstdCompressor(level=_ZSTD_LEVEL).compress(raw))
+    else:
+        meta.update(mode="zlib")
+        sink.write(zlib.compress(raw, _ZLIB_LEVEL))
+    meta["bytes"] = sink.nbytes
+    return meta
+
+
+def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
+    """In-memory :func:`encode_tensor_to`: returns ``(payload, meta)``."""
+    bio = io.BytesIO()
+    meta = encode_tensor_to(bio, x, eb=eb)
+    return bio.getvalue(), meta
 
 
 def decode_tensor(payload: bytes, meta: dict) -> np.ndarray:
     shape = tuple(meta["shape"])
     dtype = np.dtype(meta["dtype"])
-    if meta["mode"] == "cuszhi":
+    if meta["mode"] in ("cuszhi", "cuszhi3"):  # v3 frames decode through the same path
         pipeline = meta.get("pipeline", _LEGACY_EB_PIPELINE)
         comp = Compressor(CompressorSpec(eb=meta["eb"], pipeline=pipeline, autotune=False))
         field = comp.decompress(payload)

@@ -20,7 +20,7 @@ import uuid
 import jax
 import numpy as np
 
-from .codec import decode_tensor, encode_tensor
+from .codec import decode_tensor, encode_tensor_to
 
 _MANIFEST = "manifest.json"
 
@@ -49,15 +49,17 @@ def save(tree, directory: str | os.PathLike, step: int, *, eb: float = 0.0) -> d
     raw_total = comp_total = 0
     for key, leaf in _leaf_paths(tree):
         arr = np.asarray(leaf)
-        payload, meta = encode_tensor(arr, eb=eb)
         fn = f"{key}.bin"
+        # error-bounded leaves stream v3 frames into the file as each chunk
+        # encodes, so OS writeback of earlier frames overlaps the encode of
+        # later ones; one fsync per leaf seals the file
         with open(tmp / fn, "wb") as f:
-            f.write(payload)
+            meta = encode_tensor_to(f, arr, eb=eb)
             f.flush()
             os.fsync(f.fileno())
-        manifest["leaves"][key] = dict(meta, file=fn, bytes=len(payload))
+        manifest["leaves"][key] = dict(meta, file=fn)
         raw_total += arr.nbytes
-        comp_total += len(payload)
+        comp_total += meta["bytes"]
     manifest["raw_bytes"] = int(raw_total)
     manifest["compressed_bytes"] = int(comp_total)
     manifest["cr"] = round(raw_total / max(comp_total, 1), 3)
@@ -109,7 +111,13 @@ def restore(tree_like, directory: str | os.PathLike, step: int | None = None, *,
 
 class AsyncCheckpointer:
     """Single-slot background saver: at most one pending snapshot, newer
-    requests replace queued ones (training never waits on I/O)."""
+    requests replace queued ones (training never waits on I/O).
+
+    Worker-thread failures are never silently parked until a later
+    ``submit``: :meth:`wait` (drain) and :meth:`close` (the sync point
+    before a final synchronous save) both re-raise the stored exception
+    *object*, so the original worker-thread traceback is preserved on it.
+    """
 
     def __init__(self, directory: str | os.PathLike, *, eb: float = 0.0):
         self.directory = pathlib.Path(directory)
@@ -122,29 +130,41 @@ class AsyncCheckpointer:
     def _worker(self):
         while True:
             item = self._q.get()
-            if item is None:
-                return
-            tree, step = item
             try:
+                if item is None:
+                    return
+                tree, step = item
                 save(tree, self.directory, step, eb=self.eb)
-            except Exception as e:  # noqa: BLE001
+            except Exception as e:  # noqa: BLE001 - stored with its traceback, re-raised on wait/close
                 self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._err:
+            err, self._err = self._err, None
+            raise err  # the exception object still carries the worker traceback
 
     def submit(self, tree, step: int):
-        if self._err:
-            raise self._err
+        self._raise_pending()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot now
         try:
             self._q.put_nowait((host_tree, step))
         except queue.Full:
             try:
                 self._q.get_nowait()  # drop the stale pending snapshot
+                self._q.task_done()
             except queue.Empty:
                 pass
             self._q.put_nowait((host_tree, step))
 
+    def wait(self):
+        """Block until every submitted snapshot is saved (or failed), then
+        surface any worker exception with its original traceback."""
+        self._q.join()
+        self._raise_pending()
+
     def close(self):
         self._q.put(None)
         self._thread.join(timeout=60)
-        if self._err:
-            raise self._err
+        self._raise_pending()

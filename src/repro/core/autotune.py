@@ -224,27 +224,44 @@ def _code_bits(hist: np.ndarray, n_outliers: int) -> float:
     return n * stats["entropy"] + int(n_outliers) * OUTLIER_BITS
 
 
-def _sample_blocks(blocks: np.ndarray) -> np.ndarray:
-    nb = blocks.shape[0]
+def plan_sample_indices(nb: int) -> np.ndarray:
+    """Block indices :func:`autotune_plan` samples out of ``nb`` blocks.
+
+    Exported so device-parallel callers (repro.core.distributed) can gather
+    exactly this sample per shard and hand it back ``presampled`` — the
+    plan they obtain is then bit-identical to the in-process tuner's.
+    """
     if nb <= EXHAUSTIVE_BLOCKS:
-        return np.ascontiguousarray(blocks)
+        return np.arange(nb, dtype=np.int64)
     ns = min(nb, max(MIN_SAMPLE_BLOCKS, int(round(SAMPLE_FRACTION * nb))))
-    idx = np.linspace(0, nb - 1, ns).astype(np.int64)  # uniform sampling (paper)
-    return np.ascontiguousarray(blocks[idx])
+    return np.linspace(0, nb - 1, ns).astype(np.int64)  # uniform sampling (paper)
+
+
+def legacy_sample_indices(nb: int) -> np.ndarray:
+    """Block indices the legacy :func:`autotune` samples (no exhaustive tier)."""
+    ns = min(nb, max(MIN_SAMPLE_BLOCKS, int(round(SAMPLE_FRACTION * nb))))
+    return np.linspace(0, nb - 1, ns).astype(np.int64)
+
+
+def _sample_blocks(blocks: np.ndarray) -> np.ndarray:
+    if blocks.shape[0] <= EXHAUSTIVE_BLOCKS:
+        return np.ascontiguousarray(blocks)  # no-copy when already contiguous
+    return np.ascontiguousarray(blocks[plan_sample_indices(blocks.shape[0])])
 
 
 # ------------------------------------------------------------------ tuners
-def autotune(blocks: np.ndarray, twoeb: float, levels=(8, 4, 2, 1), anchor_every: int = 16, rng_seed: int = 0):
+def autotune(blocks: np.ndarray, twoeb: float, levels=(8, 4, 2, 1), anchor_every: int = 16, rng_seed: int = 0,
+             presampled: bool = False):
     """Legacy tuner: per-level (spline x scheme) argmin of absolute error.
 
     blocks: (nb, B..). Returns (splines, schemes) tuples, one entry per level.
+    ``presampled=True``: blocks are already the :func:`legacy_sample_indices`
+    sample (device-parallel callers gather it shard-side) — skip resampling.
     """
     ndim = blocks.ndim - 1
     B = blocks.shape[1]
     nb = blocks.shape[0]
-    ns = min(nb, max(MIN_SAMPLE_BLOCKS, int(round(SAMPLE_FRACTION * nb))))
-    idx = np.linspace(0, nb - 1, ns).astype(np.int64)
-    sample = jnp.asarray(blocks[idx])
+    sample = jnp.asarray(blocks if presampled else blocks[legacy_sample_indices(nb)])
     am = jnp.asarray(_anchor_mask(sample.shape[1:], anchor_every))
     recon = jnp.where(am, sample, 0.0)
     twoeb = jnp.float32(twoeb)
@@ -334,12 +351,16 @@ def autotune_plan(
     trial_pipeline: str = "cr",
     max_trials: int = 6,
     reorder: bool = True,
+    presampled_of: int | None = None,
 ) -> PredictorPlan:
     """Full planner behind ``predictor="auto"``.
 
     blocks: (nb, B..) anchor blocks (gathered at the block stride);
     ``field_shape``: optional (batch, *padded) shape for an exact anchor
-    count in the stride comparison.
+    count in the stride comparison. ``presampled_of=N``: blocks are already
+    the :func:`plan_sample_indices` sample of an N-block field (gathered
+    shard-side by repro.core.distributed) — skip resampling and scale code
+    bits by N/len(blocks), exactly as the in-process path would.
 
     Mirrors the lossless orchestrator's estimate-then-trial structure,
     per candidate anchor stride:
@@ -359,10 +380,12 @@ def autotune_plan(
        sampled fields it falls back to block-local level segments,
        extrapolated to the full field.
     """
-    nb = blocks.shape[0]
     ndim = blocks.ndim - 1
     B = blocks.shape[1]
-    sample_np = _sample_blocks(blocks)
+    if presampled_of is not None:
+        nb, sample_np = int(presampled_of), np.ascontiguousarray(blocks)
+    else:
+        nb, sample_np = blocks.shape[0], _sample_blocks(blocks)
     ns = sample_np.shape[0]
     sample = jnp.asarray(sample_np)
     twoeb_j = jnp.float32(twoeb)

@@ -32,6 +32,11 @@ compact binary header (repro.core.serial), then a section table — u32
 section count + u64 sizes — followed by the section bytes. Containers
 written by earlier checkouts (``CSZH1\\n`` magic + JSON header, JSON-meta
 lossless streams) still decompress bit-exactly through the v1 read path.
+Container v3 (``CSZH3\\n``, repro.core.frames) frames a field as
+independently decodable chunks — each frame is a complete v1/v2 container
+of one chunk, CRC-guarded — written by ``repro.core.distributed`` for
+sharded/streaming compression; ``decompress(buf, frames=[...])`` decodes
+any subset in any order.
 Spec validation happens at construction: unknown pipeline/backend/
 predictor names raise immediately, listing the registered names.
 
@@ -66,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import blocks as blk
+from . import frames as frames_mod
 from . import lorenzo as lor
 from .autotune import DEFAULT_STRIDES, autotune, autotune_plan, levels_for_stride
 from .lossless import orchestrate, pipelines
@@ -77,6 +83,7 @@ from .stencils import SPLINES, build_steps
 
 MAGIC_V1 = b"CSZH1\n"
 MAGIC = b"CSZH2\n"
+MAGIC_V3 = frames_mod.MAGIC_V3  # chunked frame streams (repro.core.frames)
 
 _PREDICTORS = ("interp", "auto", "lorenzo", "offset1d")
 _BACKENDS = ("jax", "pallas")
@@ -261,7 +268,16 @@ class Compressor:
         the winning :class:`~repro.core.autotune.PredictorPlan` under
         ``pplan`` — assembled from the serialized header fields, which is
         why a plan costs the container nothing over a fixed spec.
+
+        v3 (chunked) containers return the global header plus a ``frames``
+        list with each frame's inspect dict and byte size.
         """
+        if frames_mod.is_v3(buf):
+            header, table = frames_mod.frame_table(buf)
+            out = dict(header, n_frames=len(table), frame_bytes=[size for _, size, _ in table])
+            if header.get("kind") == "chunks":  # frames are themselves containers
+                out["frames"] = [Compressor.inspect(frames_mod.read_frame(buf, t)) for t in table]
+            return out
         header, sections = _sections_unpack(buf)
         out = dict(header, section_bytes=[len(s) for s in sections])
         if header.get("mode") == "interp" and header.get("predictor") == "auto" and "splines" in header:
@@ -283,44 +299,49 @@ class Compressor:
         codes_b, outl_b, _ = compress_blocks(jnp.asarray(blocks), jnp.float32(2.0 * eb_abs), steps, stride)
         return np.asarray(codes_b), np.asarray(outl_b)
 
-    def _compress_interp(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
+    def _tune_interp(self, blocks: np.ndarray, eb_abs: float, batch: int, padded_shapes,
+                     presampled_of: int | None = None):
+        """Resolve the (stride, splines, schemes) the predictor will run.
+
+        ``blocks`` is the full block batch, or — for device-parallel callers
+        (repro.core.distributed) that only pulled the tuning sample to host —
+        the pre-gathered sample with ``presampled_of`` the true block count.
+        Records ``self.last_plan`` under ``predictor="auto"``.
+        """
         sp = self.spec
-        xb, spatial = self._spatial_view(x)
-        ndim = len(spatial)
-        batch = xb.shape[0]
-        padded = blk.pad_field_batch(xb, blk.ANCHOR_STRIDE)
-        padded_shapes = padded.shape[1:]
-        blocks = blk.gather_blocks_batch(padded, blk.ANCHOR_STRIDE)
-        plan = None
         if sp.predictor == "auto":
             plan = autotune_plan(blocks, 2.0 * eb_abs, tuple(sp.plan_anchor_strides),
                                  field_shape=(batch,) + tuple(padded_shapes),
                                  trial_pipeline=sp.pipeline if sp.pipeline != "auto" else "cr",
-                                 reorder=sp.reorder)
+                                 reorder=sp.reorder, presampled_of=presampled_of)
             self.last_plan = plan
-            stride, levels = plan.anchor_stride, plan.levels
-            splines, schemes = plan.splines, plan.schemes
+            return plan.anchor_stride, plan.splines, plan.schemes
+        stride, levels = sp.anchor_stride, sp.levels
+        if sp.autotune:
+            splines, schemes = autotune(blocks, 2.0 * eb_abs, levels, stride,
+                                        presampled=presampled_of is not None)
         else:
-            stride, levels = sp.anchor_stride, sp.levels
-            if sp.autotune:
-                splines, schemes = autotune(blocks, 2.0 * eb_abs, levels, stride)
-            else:
-                splines, schemes = tuple(sp.splines[: len(levels)]), tuple(sp.schemes[: len(levels)])
-        steps = build_steps(ndim, blk.BLOCK, levels, splines, schemes)
-        codes_b, outl_b = self._run_predictor(blocks, eb_abs, steps, stride, ndim)
-        cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
-        ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+            splines, schemes = tuple(sp.splines[: len(levels)]), tuple(sp.schemes[: len(levels)])
+        return stride, splines, schemes
+
+    def _pack_interp(self, base_hdr: dict, *, cgrid: np.ndarray, anc: np.ndarray,
+                     oi: np.ndarray, ov: np.ndarray, stride: int, splines, schemes) -> bytes:
+        """Assemble the interp container from the post-predictor artifacts.
+
+        Shared tail of the host path and the shard_map path
+        (repro.core.distributed): identical inputs produce identical bytes,
+        which is what makes a v3 frame bit-equal to an independent
+        ``compress()`` of the same shard.
+        """
+        sp = self.spec
         seq = reorder_codes_batch(cgrid, stride, sp.reorder)
-        anc = blk.anchor_grid_batch(padded, stride).astype(np.float32, copy=False)
-        oi = np.flatnonzero(ogrid.reshape(-1)).astype(np.int64)  # already batch-global
-        ov = padded.reshape(-1)[oi].astype(np.float32, copy=False)
         payload, penc = self._encode_codes(seq)
         header = dict(
             base_hdr,
             mode="interp",
             anchor_stride=int(stride),  # may differ from the spec under a plan
-            padded=list(padded_shapes),
-            batch=int(batch),
+            padded=list(cgrid.shape[1:]),
+            batch=int(cgrid.shape[0]),
             splines=list(splines),
             schemes=list(schemes),
             reorder=bool(sp.reorder),
@@ -331,7 +352,29 @@ class Compressor:
         # already serialized above — zero container overhead vs a fixed spec.
         # Compressor.inspect reassembles the "pplan" view from those fields;
         # the full diagnostics (scores, candidates) stay on self.last_plan.
-        return _sections_pack(header, [payload, anc.tobytes(), oi.tobytes(), ov.tobytes()])
+        anc = anc.astype(np.float32, copy=False)
+        return _sections_pack(header, [payload, anc.tobytes(),
+                                       oi.astype(np.int64, copy=False).tobytes(),
+                                       ov.astype(np.float32, copy=False).tobytes()])
+
+    def _compress_interp(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
+        sp = self.spec
+        xb, spatial = self._spatial_view(x)
+        ndim = len(spatial)
+        batch = xb.shape[0]
+        padded = blk.pad_field_batch(xb, blk.ANCHOR_STRIDE)
+        padded_shapes = padded.shape[1:]
+        blocks = blk.gather_blocks_batch(padded, blk.ANCHOR_STRIDE)
+        stride, splines, schemes = self._tune_interp(blocks, eb_abs, batch, padded_shapes)
+        steps = build_steps(ndim, blk.BLOCK, levels_for_stride(stride), splines, schemes)
+        codes_b, outl_b = self._run_predictor(blocks, eb_abs, steps, stride, ndim)
+        cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+        ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+        anc = blk.anchor_grid_batch(padded, stride)
+        oi = np.flatnonzero(ogrid.reshape(-1)).astype(np.int64)  # already batch-global
+        ov = padded.reshape(-1)[oi]
+        return self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
+                                 stride=stride, splines=splines, schemes=schemes)
 
     def _compress_lorenzo(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
         xb, spatial = self._spatial_view(x)
@@ -351,7 +394,18 @@ class Compressor:
         return _sections_pack(header, [payload])
 
     # ------------------------------------------------------------ decompress
-    def decompress(self, buf: bytes) -> np.ndarray:
+    def decompress(self, buf: bytes, frames=None) -> np.ndarray:
+        """Decompress a v1/v2/v3 container.
+
+        ``frames``: v3 containers only — an iterable of frame indices to
+        decode (any order). The result is the selected chunks concatenated
+        along the container's chunk axis in the order given; ``None``
+        decodes every frame and reassembles the full field.
+        """
+        if frames_mod.is_v3(buf):
+            return self._decompress_v3(buf, frames)
+        if frames is not None:
+            raise ValueError("frames= is only meaningful for v3 (chunked) containers")
         header, sections = _sections_unpack(buf)
         shape = tuple(header["shape"])
         mode = header["mode"]
@@ -400,6 +454,22 @@ class Compressor:
         spatial = shape[len(shape) - ndim :] if len(shape) >= ndim else shape
         sl = (slice(None),) + tuple(slice(0, s) for s in spatial)
         return out[sl].reshape(shape)
+
+    def _decompress_v3(self, buf: bytes, frames=None) -> np.ndarray:
+        """Chunked container v3: decode frames (each a v1/v2 container of one
+        chunk) independently and reassemble along the chunk axis."""
+        header, table = frames_mod.frame_table(buf)
+        if header.get("kind") != "chunks":
+            raise ValueError(
+                f"v3 container kind {header.get('kind')!r} is not a compressor chunk "
+                "stream; use its producer's reader"
+            )
+        idx = list(range(len(table))) if frames is None else [int(i) for i in frames]
+        if not idx:
+            raise ValueError("frames= selected no frames; pass at least one index (or None for all)")
+        parts = [self.decompress(frames_mod.read_frame(buf, table[i])) for i in idx]
+        axis = int(header.get("axis", 0))
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=axis)
 
     def _decompress_lorenzo(self, header, sections, shape) -> np.ndarray:
         seq = pipelines.decode(sections[0])

@@ -1,0 +1,175 @@
+"""Container v3: chunked frame streams (``CSZH3`` magic).
+
+A v3 container is a sequence of *independently decodable* frames behind one
+global header. Each frame is an opaque byte blob — for the compressor it is
+a complete v1/v2 container of one shard/chunk, so every frame carries its
+own header and section table and replays without any other frame — guarded
+by a CRC32 and a length prefix. The layout is streaming-first:
+
+    CSZH3\\n | u32 hlen | header (repro.core.serial) |
+    n x [ u64 size | u32 crc32 | frame bytes ] | u32 n_frames | CSZ3END\\n
+
+Frames are length-prefixed (a writer never needs to know sizes up front,
+so encode can overlap I/O), and the trailing count + end marker let a
+reader detect truncation. The global header is a plain serial dict; the
+compressor stores ``kind="chunks"`` plus the split geometry there, other
+producers (gradient shards, KV-cache offload) store their own kinds.
+
+Random access walks the length prefixes — n hops of 12 bytes each, no
+payload parsing — so partial decode (``frames=[...]``) and out-of-order
+decode cost nothing beyond the frames actually read.
+"""
+from __future__ import annotations
+
+import io
+import struct
+import zlib
+
+from .serial import pack_obj, unpack_obj
+
+MAGIC_V3 = b"CSZH3\n"
+_END = b"CSZ3END\n"
+_FRAME_PREFIX = struct.Struct("<QI")  # u64 size, u32 crc32
+
+
+def is_v3(buf: bytes) -> bool:
+    return bytes(buf[: len(MAGIC_V3)]) == MAGIC_V3
+
+
+class FrameWriter:
+    """Streaming v3 writer over any ``write()``-able object.
+
+    Frames are written (and flushed, when the sink supports it) as they are
+    produced, so a slow consumer — disk writeback, a socket — overlaps with
+    the encode of the next frame instead of waiting for the whole
+    container. ``close()`` appends the trailing frame count + end marker;
+    a stream without them is detectably truncated.
+    """
+
+    def __init__(self, f, header: dict | None = None):
+        self._f = f
+        self._n = 0
+        self._closed = False
+        hb = pack_obj(dict(header or {}))
+        f.write(MAGIC_V3)
+        f.write(struct.pack("<I", len(hb)))
+        f.write(hb)
+
+    def write_frame(self, frame: bytes) -> None:
+        if self._closed:
+            raise ValueError("FrameWriter is closed")
+        self._f.write(_FRAME_PREFIX.pack(len(frame), zlib.crc32(frame) & 0xFFFFFFFF))
+        self._f.write(frame)
+        if hasattr(self._f, "flush"):
+            self._f.flush()
+        self._n += 1
+
+    def close(self) -> int:
+        """Finalize the stream; returns the frame count."""
+        if not self._closed:
+            self._f.write(struct.pack("<I", self._n))
+            self._f.write(_END)
+            if hasattr(self._f, "flush"):
+                self._f.flush()
+            self._closed = True
+        return self._n
+
+
+def pack_frames(header: dict, frames) -> bytes:
+    """One-shot v3 writer: global header + every frame, finalized."""
+    bio = io.BytesIO()
+    w = FrameWriter(bio, header)
+    for fr in frames:
+        w.write_frame(fr)
+    w.close()
+    return bio.getvalue()
+
+
+def frame_table(buf) -> tuple[dict, list[tuple[int, int, int]]]:
+    """Parse a v3 stream without touching frame payloads.
+
+    Returns ``(header, table)`` where ``table[i] = (offset, size, crc32)``
+    of frame ``i``'s payload. Raises on bad magic or a truncated stream
+    (missing end marker / frame-count mismatch).
+    """
+    buf = memoryview(buf)
+    if not is_v3(buf):
+        raise ValueError(f"bad container magic {bytes(buf[:6])!r}; expected {MAGIC_V3!r}")
+    off = len(MAGIC_V3)
+    (hlen,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    header = unpack_obj(bytes(buf[off : off + hlen]))
+    off += hlen
+    end_at = len(buf) - len(_END) - 4
+    table = []
+    while off < end_at:
+        size, crc = _FRAME_PREFIX.unpack_from(buf, off)
+        off += _FRAME_PREFIX.size
+        if off + size > end_at:
+            raise ValueError(f"truncated v3 container: frame {len(table)} runs past the end marker")
+        table.append((off, size, crc))
+        off += size
+    (n,) = struct.unpack_from("<I", buf, off)
+    if bytes(buf[off + 4 : off + 4 + len(_END)]) != _END or n != len(table):
+        raise ValueError(
+            f"truncated v3 container: end marker/frame count invalid ({n} declared, {len(table)} found)"
+        )
+    return header, table
+
+
+def read_frame(buf, table_entry: tuple[int, int, int], *, verify: bool = True) -> bytes:
+    """Extract one frame payload by its :func:`frame_table` entry."""
+    off, size, crc = table_entry
+    frame = bytes(memoryview(buf)[off : off + size])
+    if verify and (zlib.crc32(frame) & 0xFFFFFFFF) != crc:
+        raise ValueError(f"frame CRC mismatch at offset {off} (corrupt container)")
+    return frame
+
+
+def unpack_frames(buf, *, verify: bool = True) -> tuple[dict, list[bytes]]:
+    """Parse a whole v3 stream into ``(header, [frame bytes, ...])``."""
+    header, table = frame_table(buf)
+    return header, [read_frame(buf, t, verify=verify) for t in table]
+
+
+class FrameReader:
+    """Streaming v3 reader over any ``read()``-able object.
+
+    Parses the global header eagerly (``.header``); iterating yields frame
+    payloads one at a time, CRC-checked, without buffering the rest of the
+    stream — the decode loop can start before the producer finished
+    writing later frames to the file.
+    """
+
+    def __init__(self, f, *, verify: bool = True):
+        self._f = f
+        self._verify = verify
+        self.frames_read = 0
+        magic = f.read(len(MAGIC_V3))
+        if magic != MAGIC_V3:
+            raise ValueError(f"bad container magic {magic!r}; expected {MAGIC_V3!r}")
+        (hlen,) = struct.unpack("<I", f.read(4))
+        self.header = unpack_obj(f.read(hlen))
+
+    def __iter__(self):
+        while True:
+            prefix = self._f.read(_FRAME_PREFIX.size)
+            if len(prefix) < _FRAME_PREFIX.size:
+                raise ValueError("truncated v3 container: stream ended inside a frame prefix")
+            # the trailer (u32 count + end marker) is exactly 12 bytes, the
+            # same width as a frame prefix: detect it by the end marker
+            if prefix[4:] == _END:
+                (n,) = struct.unpack("<I", prefix[:4])
+                if n != self.frames_read:
+                    raise ValueError(
+                        f"truncated v3 container: {n} frames declared, {self.frames_read} read"
+                    )
+                return
+            size, crc = _FRAME_PREFIX.unpack(prefix)
+            frame = self._f.read(size)
+            if len(frame) < size:
+                raise ValueError("truncated v3 container: stream ended inside a frame")
+            if self._verify and (zlib.crc32(frame) & 0xFFFFFFFF) != crc:
+                raise ValueError(f"frame {self.frames_read} CRC mismatch (corrupt container)")
+            self.frames_read += 1
+            yield frame

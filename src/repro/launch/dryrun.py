@@ -14,11 +14,15 @@ Usage:
 from __future__ import annotations
 
 # The dry-run needs 512 placeholder devices; jax locks the device count on
-# first init, so these two lines MUST precede every other import
-# (including any `from repro...`).
+# first init, so these lines MUST precede every other import (including any
+# `from repro...`). XLA honours the LAST occurrence of a repeated flag, so an
+# inherited device-count override (e.g. the CI distributed lane's 8 fake
+# devices) is dropped rather than prepended-around.
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+_inherited = [f for f in os.environ.get("XLA_FLAGS", "").split()
+              if not f.startswith("--xla_force_host_platform_device_count")]
+os.environ["XLA_FLAGS"] = " ".join(["--xla_force_host_platform_device_count=512"] + _inherited)
 
 import argparse
 import json

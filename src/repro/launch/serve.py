@@ -5,8 +5,10 @@
 ``--kv-compress`` demonstrates error-bounded KV-cache offload on the serve
 path: after prefill, every float cache leaf rides the cuSZ-Hi compressor
 with the orchestrated ``pipeline="auto"`` lossless stack (best-fit
-registered pipeline per leaf), is restored, and decode continues from the
-reconstructed cache — the paged-out/paged-in scenario for long prompts.
+registered pipeline per leaf) into a container-v3 frame stream — one
+independently decodable frame per layer tensor, appended incrementally —
+then the stream is read back frame by frame and decode continues from the
+reconstructed cache: the paged-out/paged-in scenario for long prompts.
 """
 from __future__ import annotations
 
@@ -22,30 +24,53 @@ from repro.models import decode_step, init_params, prefill
 
 
 def _kv_roundtrip(cache, eb: float):
-    """Compress+restore float cache leaves through pipeline='auto'.
+    """Offload+restore the float cache leaves as one v3 frame stream.
 
-    Returns (restored cache, stats dict). Non-float or tiny leaves pass
-    through untouched (they are index/position bookkeeping, not KV data).
+    Offload is *incremental*: each cache leaf (a layer's K or V tensor)
+    compresses into its own container-v3 frame and is appended to the
+    stream the moment it is ready — the paged-out bytes for layer L exist
+    while layer L+1 is still encoding, instead of one monolithic
+    compress-everything roundtrip. Restore streams the frames back in
+    order (``FrameReader``) and rebuilds the cache leaf by leaf; each
+    frame is independently decodable, so a paging implementation can pull
+    back any single layer. Non-float or tiny leaves pass through untouched
+    (they are index/position bookkeeping, not KV data).
+
+    Returns (restored cache, stats dict).
     """
-    from repro.core import Compressor, cusz_hi_auto
+    import io
+
+    from repro.core import Compressor, FrameReader, FrameWriter, cusz_hi_auto
 
     comp = cusz_hi_auto(eb=eb, autotune=False)
-    stats = {"raw_bytes": 0, "comp_bytes": 0, "pipelines": {}}
+    stats = {"raw_bytes": 0, "comp_bytes": 0, "frames": 0, "pipelines": {}}
+    leaves, treedef = jax.tree.flatten(cache)
 
-    def one(leaf):
+    # ---- offload: one frame per float cache leaf, streamed as produced
+    sink = io.BytesIO()
+    writer = FrameWriter(sink, {"kind": "kvcache", "eb": eb})
+    framed: list[int] = []  # leaf indices, in frame order
+    for i, leaf in enumerate(leaves):
         arr = np.asarray(leaf)
         if not jnp.issubdtype(leaf.dtype, jnp.floating) or arr.size < 4096:
-            return leaf
+            continue
         buf = comp.compress(arr.astype(np.float32))
-        hdr = Compressor.inspect(buf)
-        picked = hdr.get("pipeline", "?")
+        writer.write_frame(buf)
+        framed.append(i)
+        picked = Compressor.inspect(buf).get("pipeline", "?")
         stats["raw_bytes"] += arr.size * arr.dtype.itemsize
         stats["comp_bytes"] += len(buf)
         stats["pipelines"][picked] = stats["pipelines"].get(picked, 0) + 1
-        out = comp.decompress(buf).reshape(arr.shape)
-        return jnp.asarray(out, leaf.dtype)
+    stats["frames"] = writer.close()
+    stats["stream_bytes"] = sink.getbuffer().nbytes
 
-    cache = jax.tree.map(one, cache)
+    # ---- restore: stream the frames back, rebuilding leaf by leaf
+    sink.seek(0)
+    reader = FrameReader(sink)
+    for i, frame in zip(framed, reader):
+        out = comp.decompress(frame).reshape(leaves[i].shape)
+        leaves[i] = jnp.asarray(out, leaves[i].dtype)
+    cache = jax.tree.unflatten(treedef, leaves)
     stats["cr"] = stats["raw_bytes"] / max(stats["comp_bytes"], 1)
     return cache, stats
 
@@ -86,8 +111,8 @@ def main(argv=None):
         cache, kv = _kv_roundtrip(cache, args.kv_eb)
         print(
             f"kv-cache offload: {kv['raw_bytes']/2**20:.1f} MiB -> {kv['comp_bytes']/2**20:.1f} MiB "
-            f"(CR {kv['cr']:.2f}, eb={args.kv_eb:g} rel, pipelines {kv['pipelines']}, "
-            f"{time.time()-t0:.2f}s roundtrip)"
+            f"in {kv['frames']} layer-frames (CR {kv['cr']:.2f}, eb={args.kv_eb:g} rel, "
+            f"pipelines {kv['pipelines']}, {time.time()-t0:.2f}s roundtrip)"
         )
 
     dstep = jax.jit(lambda p, c, t, i: decode_step(p, cfg, t, i, c), donate_argnums=(1,))

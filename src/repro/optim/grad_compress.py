@@ -16,7 +16,11 @@ parameter-server push, gradient spooling to disk), :func:`pack_quantized`
 orchestrator (``pipeline="auto"`` picks the best-fit registered pipeline
 per shard and records it in the payload header), shrinking the wire
 bytes well below the 4x of plain int8 when gradients are sparse or
-low-entropy.
+low-entropy. :func:`pack_quantized_sharded` is the device-sharded form:
+each addressable device shard is packed as its own container-v3 frame
+(repro.core.frames) straight off its device — no host gather of the
+global tensor — with per-shard pipeline choices and slice metadata for
+(partial) reassembly.
 """
 from __future__ import annotations
 
@@ -92,3 +96,59 @@ def unpack_quantized(buf: bytes):
     stream = pipelines.decode(buf[4 + hlen :])
     q = (stream ^ np.uint8(0x80)).view(np.int8).reshape(hdr["shape"])
     return q, hdr["scale"]
+
+
+def pack_quantized_sharded(q, scale, pipeline: str = "auto") -> bytes:
+    """Per-device :func:`pack_quantized`, with no host gather of ``q``.
+
+    ``q``: a device-sharded jax array (int8). Each *addressable* shard is
+    pulled to host individually — never the assembled global array, which
+    is what ``np.asarray`` on a sharded array would do — and packed as its
+    own container-v3 frame through the lossless orchestrator, so every
+    device shard keeps its own best-fit pipeline choice. Replicated
+    placements are deduped by shard index. The global header records each
+    frame's slice of the full tensor; :func:`unpack_quantized_sharded`
+    reassembles (a subset of frames reassembles a partial tensor).
+    """
+    import io
+
+    from repro.core.frames import FrameWriter
+
+    seen: dict[tuple, object] = {}
+    for s in q.addressable_shards:
+        key = tuple((sl.start or 0, sl.stop if sl.stop is not None else dim)
+                    for sl, dim in zip(s.index, q.shape))
+        seen.setdefault(key, s.data)
+    order = sorted(seen)
+    sink = io.BytesIO()
+    w = FrameWriter(sink, {
+        "kind": "gradq",
+        "shape": list(q.shape),
+        "scale": float(scale),
+        "slices": [[list(b) for b in key] for key in order],
+    })
+    for key in order:
+        local = np.asarray(seen[key])  # device->host copy of this shard only
+        w.write_frame(pack_quantized(local, scale, pipeline))
+    w.close()
+    return sink.getvalue()
+
+
+def unpack_quantized_sharded(buf: bytes, frames=None):
+    """Inverse of :func:`pack_quantized_sharded`: ``(q int8, scale)``.
+
+    ``frames``: optional frame indices — only those shards are filled
+    (the rest of the tensor is zero), for partial/streamed reassembly.
+    """
+    from repro.core.frames import frame_table, read_frame
+
+    header, table = frame_table(buf)
+    if header.get("kind") != "gradq":
+        raise ValueError(f"not a sharded gradient payload (kind={header.get('kind')!r})")
+    out = np.zeros(tuple(header["shape"]), np.int8)
+    idx = range(len(table)) if frames is None else frames
+    for i in idx:
+        q_s, _ = unpack_quantized(read_frame(buf, table[i]))
+        sl = tuple(slice(a, b) for a, b in header["slices"][i])
+        out[sl] = q_s
+    return out, header["scale"]

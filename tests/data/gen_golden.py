@@ -1,0 +1,62 @@
+"""Regenerate the golden container fixtures (run from the repo root):
+
+    PYTHONPATH=src python tests/data/gen_golden.py
+
+Commits one small ragged 3-D field plus the same compression in every
+container generation — v1 (JSON header + JSON-meta lossless stream), v2
+(binary header + section table), v3 (chunked frames) — and the decoded
+array. tests/test_compressor_roundtrip.py decodes the committed blobs
+byte-for-byte, so a container-format regression (not just an in-process
+round-trip asymmetry) fails loudly.
+
+Only regenerate when the container format changes *intentionally*; the
+fixtures are the compatibility contract for already-written archives.
+"""
+import pathlib
+
+import numpy as np
+
+from repro.core import Compressor, CompressorSpec, chunk_compress
+from repro.core.compressor import _sections_pack_v1, _sections_unpack
+from repro.core.lossless import pipelines as pp
+
+HERE = pathlib.Path(__file__).parent
+SPEC = CompressorSpec(eb=1e-2, pipeline="cr", autotune=False)
+
+
+def golden_field() -> np.ndarray:
+    rng = np.random.default_rng(20260731)
+    g = np.linspace(0, 2 * np.pi, 28)
+    X, Y, Z = np.meshgrid(g[:20], g[:24], g, indexing="ij")
+    return (np.sin(2 * X) * np.cos(Y) + 0.3 * np.sin(3 * Z)
+            + 0.02 * rng.standard_normal((20, 24, 28))).astype(np.float32)
+
+
+def main():
+    x = golden_field()
+    comp = Compressor(SPEC)
+    v2 = comp.compress(x)
+    header, sections = _sections_unpack(v2)
+    codes = pp.decode(sections[0])
+    v1_header = {k: v for k, v in header.items() if k != "pipeline"}
+    v1 = _sections_pack_v1(v1_header, [pp.encode_v1(codes, "cr")] + list(sections[1:]))
+    v3 = chunk_compress(x, n_chunks=4, spec=SPEC)
+    decoded = comp.decompress(v2)
+    assert np.array_equal(comp.decompress(v1), decoded)
+    # v3 chunks compress independently (per-chunk eb + padding), so the
+    # reconstruction is its own golden — still within the error bound
+    decoded_v3 = comp.decompress(v3)
+    eb_abs = 1e-2 * float(x.max() - x.min())
+    assert float(np.abs(decoded_v3 - x).max()) <= eb_abs * (1 + 1e-5)
+    np.save(HERE / "golden_field.npy", x)
+    np.save(HERE / "golden_decoded.npy", decoded)
+    np.save(HERE / "golden_decoded_v3.npy", decoded_v3)
+    (HERE / "golden_v1.bin").write_bytes(v1)
+    (HERE / "golden_v2.bin").write_bytes(v2)
+    (HERE / "golden_v3.bin").write_bytes(v3)
+    for f in sorted(HERE.glob("golden_*")):
+        print(f.name, f.stat().st_size, "bytes")
+
+
+if __name__ == "__main__":
+    main()

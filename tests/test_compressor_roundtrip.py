@@ -1,4 +1,6 @@
 """End-to-end compressor behaviour: the paper's error-bound contract (Eq. 1)."""
+import pathlib
+
 import numpy as np
 import pytest
 
@@ -76,6 +78,30 @@ def test_ragged_shapes():
     assert out.shape == x.shape
     rng = float(x.max() - x.min())
     assert max_abs_err(x, out) <= 1e-2 * rng * (1 + 1e-5)
+
+
+_GOLDEN = pathlib.Path(__file__).parent / "data"
+
+
+@pytest.mark.parametrize("version", [1, 2, 3])
+def test_golden_containers_decode_byte_for_byte(version):
+    """Cross-version compat against *committed* blobs (tests/data, written by
+    gen_golden.py): every container generation must keep decoding archives
+    byte-for-byte, not merely round-trip in-process."""
+    blob = (_GOLDEN / f"golden_v{version}.bin").read_bytes()
+    expected = np.load(_GOLDEN / ("golden_decoded_v3.npy" if version == 3 else "golden_decoded.npy"))
+    out = Compressor(CompressorSpec(eb=1e-2, pipeline="cr", autotune=False)).decompress(blob)
+    assert out.dtype == np.float32 and out.shape == expected.shape
+    assert np.array_equal(out, expected)
+
+
+def test_golden_containers_respect_error_bound():
+    x = np.load(_GOLDEN / "golden_field.npy")
+    eb_abs = 1e-2 * float(x.max() - x.min())
+    comp = Compressor(CompressorSpec(eb=1e-2, pipeline="cr", autotune=False))
+    for version in (1, 2, 3):
+        out = comp.decompress((_GOLDEN / f"golden_v{version}.bin").read_bytes())
+        assert max_abs_err(x, out) <= eb_abs * (1 + 1e-5), f"v{version}"
 
 
 def test_cr_ordering_on_smooth_data(smooth3d_big):

@@ -249,9 +249,11 @@ def test_checkpoint_meta_records_pipeline_and_legacy_decodes():
 
     x = np.random.default_rng(3).standard_normal((128, 64)).astype(np.float32)
     payload, meta = encode_tensor(x, eb=1e-3)
-    assert meta["mode"] == "cuszhi" and meta["pipeline"] == "auto"
-    # the recorded per-field choice must be restorable without optional deps
-    assert Compressor.inspect(payload)["pipeline"] in orc.portable_pipelines()
+    assert meta["mode"] == "cuszhi3" and meta["pipeline"] == "auto"
+    # the recorded per-frame choices must be restorable without optional deps
+    hdr = Compressor.inspect(payload)
+    assert hdr["kind"] == "chunks" and len(hdr["frames"]) == meta["n_frames"]
+    assert all(f["pipeline"] in orc.portable_pipelines() for f in hdr["frames"])
     rng = float(x.max() - x.min())
     assert np.abs(decode_tensor(payload, meta) - x).max() <= 1e-3 * rng * (1 + 1e-5)
     # a checkpoint written before the pipeline was recorded (hardcoded "tp")
