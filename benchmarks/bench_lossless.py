@@ -4,10 +4,14 @@
     PYTHONPATH=src python -m benchmarks.bench_lossless --smoke   # tiny CI grid
 
 Measures each lossless stage on a 4 MiB quantization-code-like stream (the
-codec's actual workload: Laplacian codes centered on 128), sweeps *every
-registered pipeline* plus the orchestrated ``auto`` mode over a synthetic
-byte-stream suite (each row carries a ``pipeline`` dimension with CR +
-MB/s), sweeps the fixed-steps predictor configurations plus the
+codec's actual workload: Laplacian codes centered on 128) across the
+``engine`` dimension (``--engines``: ``numpy`` = the reference host
+stages, ``device`` = the jit/Pallas encoding engine of
+repro.core.lossless.engine, verified byte-identical before timing),
+sweeps *every registered pipeline* plus the orchestrated ``auto`` mode
+over a synthetic byte-stream suite (each row carries a ``pipeline``
+dimension with CR + MB/s), sweeps the fixed-steps predictor
+configurations plus the
 plan-driven ``predictor="auto"`` over a synthetic *field* suite (each row
 carries a ``predictor`` dimension; the auto rows record the chosen
 PredictorPlan and ``cr_vs_best_fixed``), and times the end-to-end
@@ -86,9 +90,37 @@ def bench_stage(name, enc, dec, data, reps) -> dict:
     nbytes = len(payload) if isinstance(payload, (bytes, bytearray)) else payload.nbytes
     return {
         "stage": name,
+        "engine": "numpy",
         "enc_mbps": data.size / te / 1e6,
         "dec_mbps": data.size / td / 1e6,
         "cr": data.size / max(nbytes, 1),
+    }
+
+
+def bench_stage_device(name, enc_dev, dec, data, reps, enc_ref=None) -> dict:
+    """Engine-dimension twin of bench_stage: the jit/Pallas encode path of
+    repro.core.lossless.engine on a device-resident stream. The payload is
+    verified byte-identical to the numpy encoder's (the engine contract)
+    before timing; decode stays on the reference path."""
+    import jax
+    import jax.numpy as jnp
+
+    d = jnp.asarray(data)
+    payload, hdr = enc_dev(d)  # also warms the jit caches
+    pb = np.asarray(payload).tobytes()
+    if enc_ref is not None:  # the contract itself, at bench size
+        ref_payload, ref_hdr = enc_ref(data)
+        assert pb == ref_payload and hdr == ref_hdr, f"{name}: device != numpy bytes"
+    out = dec(pb, hdr)
+    assert np.array_equal(np.asarray(out).view(np.uint8).reshape(-1), data), name
+    te = _best(lambda: jax.block_until_ready(enc_dev(d)[0]), reps)
+    td = _best(lambda: dec(pb, hdr), reps)
+    return {
+        "stage": name,
+        "engine": "device",
+        "enc_mbps": data.size / te / 1e6,
+        "dec_mbps": data.size / td / 1e6,
+        "cr": data.size / max(len(pb), 1),
     }
 
 
@@ -214,18 +246,36 @@ def sweep_sharded(devices: int, side: int, reps: int, eb: float = 1e-3) -> list[
     ]
 
 
-def run(reps: int = 5, smoke: bool = False, devices: int = 1) -> dict:
+def run(reps: int = 5, smoke: bool = False, devices: int = 1,
+        engines: tuple = ("numpy", "device")) -> dict:
     stream_bytes = SMOKE_STREAM_BYTES if smoke else STREAM_BYTES
     field_side = SMOKE_FIELD_SIDE if smoke else FIELD_SIDE
     pred_side = SMOKE_FIELD_SIDE if smoke else PRED_FIELD_SIDE
     data = quant_code_stream(stream_bytes)
-    rows = [
-        bench_stage("hf", hf.encode, hf.decode, data, reps),
-        bench_stage("rre4", lambda d: rre.rre_encode(d, 4), rre.rre_decode, data, reps),
-        bench_stage("rze1", lambda d: rre.rze_encode(d, 1), rre.rze_decode, data, reps),
-        bench_stage("tcms8", lambda d: tcms.tcms_encode(d, 8), tcms.tcms_decode, data, reps),
-        bench_stage("bit1", bs.bitshuffle_encode, bs.bitshuffle_decode, data, reps),
-    ]
+    rows = []
+    if "numpy" in engines:
+        rows += [
+            bench_stage("hf", hf.encode, hf.decode, data, reps),
+            bench_stage("rre4", lambda d: rre.rre_encode(d, 4), rre.rre_decode, data, reps),
+            bench_stage("rze1", lambda d: rre.rze_encode(d, 1), rre.rze_decode, data, reps),
+            bench_stage("tcms8", lambda d: tcms.tcms_encode(d, 8), tcms.tcms_decode, data, reps),
+            bench_stage("bit1", bs.bitshuffle_encode, bs.bitshuffle_decode, data, reps),
+        ]
+    if "device" in engines:
+        from repro.core.lossless import engine as eng
+
+        rows += [
+            bench_stage_device("hf", eng.hf_encode_device, hf.decode, data, reps,
+                               enc_ref=hf.encode),
+            bench_stage_device("rre4", lambda d: eng.rre_encode_device(d, 4), rre.rre_decode, data, reps,
+                               enc_ref=lambda d: rre.rre_encode(d, 4)),
+            bench_stage_device("rze1", lambda d: eng.rze_encode_device(d, 1), rre.rze_decode, data, reps,
+                               enc_ref=lambda d: rre.rze_encode(d, 1)),
+            bench_stage_device("tcms8", lambda d: eng.tcms_encode_device(d, 8), tcms.tcms_decode, data, reps,
+                               enc_ref=lambda d: tcms.tcms_encode(d, 8)),
+            bench_stage_device("bit1", eng.bit1_encode_device, bs.bitshuffle_decode, data, reps,
+                               enc_ref=bs.bitshuffle_encode),
+        ]
     for stream, sdata in synthetic_streams(stream_bytes).items():
         rows.extend(sweep_pipelines(sdata, stream, reps))
     for stream, field in synthetic_fields(pred_side).items():
@@ -255,6 +305,7 @@ def run(reps: int = 5, smoke: bool = False, devices: int = 1) -> dict:
         "bench": "lossless_hot_path",
         "smoke": bool(smoke),
         "devices": int(devices),
+        "engines": list(engines),
         "stream_bytes": stream_bytes,
         "field": f"{field_side}^3 float32, eb=1e-3 rel",
         "pred_field": f"{pred_side}^3 float32, eb=1e-3 rel, pipeline=cr",
@@ -271,7 +322,15 @@ def main(argv=None):
                     help="tiny grid for CI: 64 KiB streams, 24^3 fields, 1 rep")
     ap.add_argument("--devices", type=int, default=1,
                     help="sharded dimension: shard_compress over N (fake CPU) devices")
+    ap.add_argument("--engines", default="numpy,device",
+                    help="comma-separated lossless-engine dimension to sweep "
+                         "over the stage benches (numpy = reference host "
+                         "stages, device = jit/Pallas engine)")
     args = ap.parse_args(argv)
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    for e in engines:
+        if e not in ("numpy", "device"):
+            ap.error(f"unknown engine {e!r}; choose from numpy,device")
     if args.smoke:
         args.reps = min(args.reps, 1)
     import jax
@@ -289,11 +348,13 @@ def main(argv=None):
                                       + inherited))
         return subprocess.run([sys.executable, os.path.abspath(__file__)]
                               + (argv if argv is not None else sys.argv[1:]), env=env).returncode
-    result = run(args.reps, smoke=args.smoke, devices=args.devices)
+    result = run(args.reps, smoke=args.smoke, devices=args.devices, engines=engines)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for r in result["stages"]:
         tag = r["stage"] + (f"[{r['stream']}]" if "stream" in r else "")
+        if "engine" in r:
+            tag += f"({r['engine']})"
         picked = f"  -> {r['picked']}" if "picked" in r else ""
         if "plan" in r:
             picked = f"  -> {r['plan']}  (x{r['cr_vs_best_fixed']:.3f} vs best fixed)"

@@ -3,17 +3,23 @@
     PYTHONPATH=src python -m benchmarks.check_cr_regression \
         --baseline BENCH_lossless_smoke.json --fresh bench_smoke.json
 
-Compares every (stream, pipeline) and (stream, predictor) cell of a fresh
-bench JSON against the committed baseline and fails (exit 1) if any
-cell's compression ratio dropped more than ``--max-drop-pct`` (default
-2%), or if a baseline cell vanished (a pipeline/predictor silently
-deregistered). Timing columns are ignored — MB/s is machine-dependent,
-CR is not: the synthetic streams are seeded and the arithmetic is
-deterministic, so a CR drop is a real codec regression, not noise.
+Compares every (stream, pipeline), (stream, predictor) and (stage,
+engine) cell of a fresh bench JSON against the committed baseline and
+fails (exit 1) if any cell's compression ratio dropped more than
+``--max-drop-pct`` (default 2%), or if a baseline cell vanished (a
+pipeline/predictor silently deregistered). Timing columns are ignored —
+MB/s is machine-dependent, CR is not: the synthetic streams are seeded
+and the arithmetic is deterministic, so a CR drop is a real codec
+regression, not noise.
 
 The two JSONs must come from the same grid (same ``smoke`` flag and
 stream sizes); comparing a smoke run against a full run would diff
-different workloads, so that is an error, not a pass.
+different workloads, so that is an error, not a pass. A *dimension*
+present in only one of the two runs (e.g. a baseline predating the
+``engine`` sweep, or a fresh run with ``--engines`` narrowed) is
+tolerated: its cells are skipped with a note instead of reported as
+per-cell regressions — adding a sweep dimension must not break the gate
+against older baselines.
 """
 from __future__ import annotations
 
@@ -29,6 +35,11 @@ def cell_key(row: dict) -> tuple | None:
     for dim in ("pipeline", "predictor"):
         if dim in row:
             return (dim, row.get("stream", "-"), row[dim])
+    if "engine" in row:  # stage benches: engine dimension (numpy vs device)
+        # each engine value is its own kind, so narrowing --engines drops a
+        # whole kind (tolerated as a grid difference) instead of leaving
+        # per-cell "missing" failures
+        return (f"engine/{row['engine']}", row.get("stream", "-"), row["stage"])
     return None
 
 
@@ -58,16 +69,27 @@ def main(argv=None) -> int:
             return 1
     bcells, fcells = cells(base), cells(fresh)
     floor = 1.0 - args.max_drop_pct / 100.0
+    # a sweep dimension absent from one side entirely is a grid difference
+    # (old baseline vs new script, or a narrowed sweep), not a regression
+    fresh_dims = {k[0] for k in fcells}
+    skipped_dims = sorted({k[0] for k in bcells} - fresh_dims)
     failures = []
+    compared = 0
     for key, bcr in sorted(bcells.items()):
+        if key[0] in skipped_dims:
+            continue
+        compared += 1
         if key not in fcells:
             failures.append(f"{key}: cell missing from fresh run (was CR {bcr:.3f})")
             continue
         fcr = fcells[key]
         if fcr < bcr * floor:
             failures.append(f"{key}: CR {bcr:.3f} -> {fcr:.3f} ({(fcr / bcr - 1) * 100:+.2f}%)")
-    kept = len(bcells) - len(failures)
-    print(f"CR gate: {kept}/{len(bcells)} cells within {args.max_drop_pct:g}% of baseline")
+    if skipped_dims:
+        print(f"note: dimension(s) {', '.join(skipped_dims)} absent from the fresh run; "
+              "their baseline cells were skipped (grid difference, not a regression)")
+    kept = compared - len(failures)
+    print(f"CR gate: {kept}/{compared} cells within {args.max_drop_pct:g}% of baseline")
     if failures:
         print("REGRESSIONS:")
         for f_ in failures:

@@ -17,7 +17,11 @@ Error-bounded tensors are written as *chunked container v3 frames*
 ~``_FRAME_TARGET_BYTES`` chunks and each chunk becomes an independently
 decodable frame with its own plan + pipeline choice. With more than one
 jax device the frames are encoded device-parallel
-(:func:`repro.core.distributed.shard_compress`); either way
+(:func:`repro.core.distributed.shard_compress`), where the default
+``CompressorSpec(engine="auto")`` now keeps each shard's quantized codes
+device-resident through the lossless stages
+(:mod:`repro.core.lossless.engine`) — the sink receives ready-to-write
+frame payloads and raw code streams never cross to host; either way
 :func:`encode_tensor_to` streams frames into the sink as they are
 produced, so the saver's fsync/writeback overlaps the encode of the next
 frame instead of waiting for the whole tensor.

@@ -8,6 +8,7 @@ so overlapping scatter writes are value-identical and ownership is exact.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 
 import numpy as np
@@ -97,6 +98,42 @@ def scatter_blocks_batch(blocks: np.ndarray, batch: int, shape_padded: tuple[int
         new_shape = (batch,) + tuple(sub.shape[1 + 2 * d] * sub.shape[2 + 2 * d] for d in range(ndim))
         out[nil + dst] = sub.reshape(new_shape)
     return out
+
+
+@functools.lru_cache(maxsize=16)
+def _scatter_index(shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE):
+    """Flat gather map realizing scatter_blocks as a single take.
+
+    ``idx[p]`` = index into the flattened (nb, B..) block array of the
+    value scatter_blocks writes at padded position ``p`` — produced by
+    running the numpy scatter over an arange, so the owner choice (and
+    therefore the output bytes) is identical to the reference scatter.
+    Cached as an int32 *device* array (block volumes are < 2^31): repeat
+    callers — one per frame on the sharded path — pay no host->device
+    re-upload, and the cache holds 4 bytes/cell for a handful of shapes
+    rather than unbounded int64 host copies.
+    """
+    import jax.numpy as jnp
+
+    nbs = block_grid(shape_padded, stride)
+    nb = int(np.prod(nbs))
+    B = stride + 1
+    src = np.arange(nb * B ** len(shape_padded), dtype=np.int32)
+    idx = scatter_blocks(src.reshape((nb,) + (B,) * len(shape_padded)), shape_padded, stride)
+    return jnp.asarray(idx.reshape(-1))  # uncommitted: follows the operand's device
+
+
+def scatter_blocks_batch_jnp(blocks, batch: int, shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE):
+    """Device twin of scatter_blocks_batch: one cached-index gather.
+
+    ``blocks`` is a jax array shaped (batch*nb, B..); returns the (batch,
+    *padded) grid as a device array, bit-identical to the numpy scatter.
+    """
+    import jax.numpy as jnp
+
+    idx = _scatter_index(tuple(int(s) for s in shape_padded), stride)
+    flat = blocks.reshape(batch, -1)
+    return jnp.take(flat, idx, axis=1).reshape((batch,) + tuple(shape_padded))
 
 
 def anchor_grid(xp: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:

@@ -87,6 +87,7 @@ MAGIC_V3 = frames_mod.MAGIC_V3  # chunked frame streams (repro.core.frames)
 
 _PREDICTORS = ("interp", "auto", "lorenzo", "offset1d")
 _BACKENDS = ("jax", "pallas")
+_ENGINES = ("auto", "numpy", "device")
 _EB_MODES = ("rel", "abs")
 _ANCHOR_STRIDES = (4, 8, 16)  # power-of-two strides the 17^ndim block supports
 
@@ -103,6 +104,13 @@ class CompressorSpec:
     schemes: tuple = ("md", "md", "md", "md")
     reorder: bool = True
     backend: str = "jax"                  # jax | pallas (fused interp3d kernel)
+    # lossless encoding engine (repro.core.lossless.engine): "numpy" runs the
+    # reference host stages, "device" keeps the code stream on device through
+    # scatter/reorder/entropy-encode (jit/Pallas stage kernels), "auto" uses
+    # the device engine exactly when the stream is already device-resident
+    # (the sharded path) and the host path otherwise. All three produce
+    # byte-identical containers — the engine carries a bit-identity contract.
+    engine: str = "auto"
     # pipeline="auto" only: restrict the orchestrator's search space, e.g. to
     # orchestrate.portable_pipelines() for artifacts that must restore on any
     # machine. None = every registered pipeline.
@@ -124,6 +132,8 @@ class CompressorSpec:
             raise ValueError(f"unknown predictor {self.predictor!r}; one of {_PREDICTORS}")
         if self.backend not in _BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; one of {_BACKENDS}")
+        if self.engine not in _ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; one of {_ENGINES}")
         if self.eb_mode not in _EB_MODES:
             raise ValueError(f"unknown eb_mode {self.eb_mode!r}; one of {_EB_MODES}")
         for st in (self.anchor_stride,) + tuple(self.plan_anchor_strides):
@@ -236,19 +246,31 @@ class Compressor:
             return self._compress_offset1d(x, eb_abs, base_hdr)
         raise ValueError(sp.predictor)
 
-    def _encode_codes(self, seq: np.ndarray) -> tuple[bytes, dict]:
+    def _encode_codes(self, seq) -> tuple[bytes, dict]:
         """Lossless-encode the code stream; returns (payload, header fields).
 
         ``pipeline="auto"`` routes through the orchestrator: the chosen
         pipeline plus the sampled statistics land in the container header
         (per field), so the selection is recorded, reproducible, and never
         re-inferred at decode time.
+
+        Engine dispatch: ``spec.engine`` decides whether ``seq`` is encoded
+        by the numpy reference stages or the device engine
+        (repro.core.lossless.engine); ``"auto"`` keeps whatever residency
+        the stream already has. Either way the payload bytes are identical
+        (the engine's bit-identity contract), so the header carries no
+        engine field and decode never knows.
         """
         sp = self.spec
+        is_dev = pipelines._is_jax(seq)
+        if sp.engine == "device" and not is_dev:
+            seq = jnp.asarray(np.ascontiguousarray(seq, np.uint8))
+        elif sp.engine == "numpy" and is_dev:
+            seq = np.asarray(seq)
         if sp.pipeline != "auto":
             return pipelines.encode(seq, sp.pipeline), {"pipeline": sp.pipeline}
         histogram = None
-        if sp.backend == "pallas":
+        if sp.backend == "pallas" and not pipelines._is_jax(seq):
             import jax
 
             from repro.kernels.histogram import histogram256_pallas
@@ -290,14 +312,18 @@ class Compressor:
         return out
 
     def _run_predictor(self, blocks: np.ndarray, eb_abs: float, steps, stride: int, ndim: int):
-        """Dispatch the fused predict+quantize over the whole block batch."""
+        """Dispatch the fused predict+quantize over the whole block batch.
+
+        Returns backend-native arrays (device for the jax backend) — the
+        host path converts, the device-engine path keeps them resident.
+        """
         if self.spec.backend == "pallas" and ndim == 3:
             from repro.kernels.interp3d import compress_blocks_pallas
 
             codes_b, outl_b, _ = compress_blocks_pallas(blocks, 2.0 * eb_abs, steps, stride)
             return codes_b, outl_b
         codes_b, outl_b, _ = compress_blocks(jnp.asarray(blocks), jnp.float32(2.0 * eb_abs), steps, stride)
-        return np.asarray(codes_b), np.asarray(outl_b)
+        return codes_b, outl_b
 
     def _tune_interp(self, blocks: np.ndarray, eb_abs: float, batch: int, padded_shapes,
                      presampled_of: int | None = None):
@@ -331,10 +357,17 @@ class Compressor:
         Shared tail of the host path and the shard_map path
         (repro.core.distributed): identical inputs produce identical bytes,
         which is what makes a v3 frame bit-equal to an independent
-        ``compress()`` of the same shard.
+        ``compress()`` of the same shard. ``cgrid`` may be a device array —
+        the level reorder then runs as a device gather and the code stream
+        flows into the encoding engine without ever visiting host.
         """
         sp = self.spec
-        seq = reorder_codes_batch(cgrid, stride, sp.reorder)
+        if pipelines._is_jax(cgrid):
+            from .reorder import reorder_codes_batch_device
+
+            seq = reorder_codes_batch_device(cgrid, stride, sp.reorder)
+        else:
+            seq = reorder_codes_batch(cgrid, stride, sp.reorder)
         payload, penc = self._encode_codes(seq)
         header = dict(
             base_hdr,
@@ -368,6 +401,19 @@ class Compressor:
         stride, splines, schemes = self._tune_interp(blocks, eb_abs, batch, padded_shapes)
         steps = build_steps(ndim, blk.BLOCK, levels_for_stride(stride), splines, schemes)
         codes_b, outl_b = self._run_predictor(blocks, eb_abs, steps, stride, ndim)
+        if sp.engine == "device":
+            # fused tail: codes stay device-resident through block scatter,
+            # level reorder, and the encoding engine (inside _pack_interp);
+            # outliers come from the code==0 <=> outlier invariant the
+            # sharded path already relies on — no outlier grid crosses over
+            cgrid = blk.scatter_blocks_batch_jnp(jnp.asarray(codes_b), batch,
+                                                 padded_shapes, blk.ANCHOR_STRIDE)
+            anc = blk.anchor_grid_batch(padded, stride)
+            oi = np.asarray(jnp.flatnonzero(cgrid.reshape(-1) == 0)).astype(np.int64)
+            ov = padded.reshape(-1)[oi]
+            return self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
+                                     stride=stride, splines=splines, schemes=schemes)
+        codes_b, outl_b = np.asarray(codes_b), np.asarray(outl_b)
         cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
         ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
         anc = blk.anchor_grid_batch(padded, stride)

@@ -3,14 +3,22 @@
 ``shard_compress`` splits a field along one axis into per-device chunks and
 runs the lossy half of the compressor — block gather, interpolation
 prediction (jax or Pallas backend), quantized-code emission — *on the
-devices*, under :func:`repro.runtime.partitioning.shard_map`. Only the
-compact artifacts come back to host: the uint8 code grids (a quarter of
-the float bytes), the anchor grids, and the outlier values (gathered
-per-shard from the device-resident padded field, never the field itself).
-The host then runs the PR 2/3 orchestration per chunk — each chunk keeps
-its own ``PredictorPlan`` and lossless-pipeline choice — and frames the
-result as container v3 (:mod:`repro.core.frames`): one complete v1/v2
-container per chunk, independently decodable, CRC-guarded.
+devices*, under :func:`repro.runtime.partitioning.shard_map`, and then —
+new with the device encoding engine (:mod:`repro.core.lossless.engine`) —
+keeps the per-shard quantized codes device-resident through block
+scatter, level reorder, and the entropy-encoding pipeline. The raw uint8
+code stream never crosses to host: what comes back per shard is the
+*encoded* frame payload, the (tiny) anchor grid, and the outlier values
+(gathered per-shard from the device-resident padded field, never the
+field itself), so the ``FrameWriter`` receives ready-to-write frames.
+The PR 2/3 orchestration still runs per chunk — each chunk keeps its own
+``PredictorPlan`` and lossless-pipeline choice (the orchestrator's
+histogram rides the device engine by default) — and the result is framed
+as container v3 (:mod:`repro.core.frames`): one complete v1/v2 container
+per chunk, independently decodable, CRC-guarded.
+``CompressorSpec(engine="numpy")`` opts back into the host reference
+encoders (identical bytes either way — the engine's bit-identity
+contract).
 
 Bit-identity contract: every frame equals ``Compressor.compress`` of the
 same chunk, byte for byte. The per-chunk error bound (rel mode), the
@@ -296,7 +304,9 @@ def _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp):
     for i, t in enumerate(tuned):
         if t is not None:
             groups.setdefault(t, []).append(i)
-    codes_np = np.empty((ndev * nblocks,) + (blk.BLOCK,) * nd, np.uint8)
+    use_dev = sp.engine != "numpy"  # auto/device: codes never visit host
+    codes_np = None if use_dev else np.empty((ndev * nblocks,) + (blk.BLOCK,) * nd, np.uint8)
+    codes_dev: dict[int, object] = {}
     anc_np: dict[int, np.ndarray] = {}
     padded_shards: dict[int, object] = {}
     for (stride, splines, schemes), members in groups.items():
@@ -317,18 +327,27 @@ def _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp):
                        out_specs=(scalar_spec,) * 3)
         td = jax.device_put(jnp.asarray(twoeb), scalar_sharding)
         codes_g, anc_g, padded_g = jax.jit(fb)(xd, td)
-        codes_host = np.asarray(codes_g)  # the compact stream: 1 byte/sample
         anc_host = np.asarray(anc_g)
         pslices = _shard_slices(padded_g)
         per_anc = anc_host.shape[0] // ndev
+        if use_dev:
+            cslices = _shard_slices(codes_g)  # per-shard device arrays
+        else:
+            codes_host = np.asarray(codes_g)
         for i in members:
-            codes_np[i * nblocks : (i + 1) * nblocks] = codes_host[i * nblocks : (i + 1) * nblocks]
+            if use_dev:
+                codes_dev[i] = cslices.get(i * nblocks)
+            else:
+                codes_np[i * nblocks : (i + 1) * nblocks] = codes_host[i * nblocks : (i + 1) * nblocks]
             anc_np[i] = anc_host[i * per_anc : (i + 1) * per_anc]
             padded_shards[i] = pslices.get(i * cb)
 
-    # ---- host tail per chunk: scatter, outliers, orchestrate, frame —
-    # yielded one at a time so the caller can write frame i while frame
-    # i+1 encodes
+    # ---- per-chunk tail: scatter + level reorder + entropy encode run on
+    # the shard's device under engine="auto"/"device" (the raw uint8 code
+    # stream never crosses to host — only the encoded frame payload does,
+    # via _pack_interp); engine="numpy" replays the host reference path.
+    # Frames are yielded one at a time so the caller can write frame i
+    # while frame i+1 encodes.
     for i in range(ndev):
         base_hdr = {
             "shape": list(chunk_shape),
@@ -341,9 +360,14 @@ def _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp):
                                  [np.float32(_first_value(xd, i, k, axis)).tobytes()])
             continue
         stride, splines, schemes = tuned[i]
-        cgrid = blk.scatter_blocks_batch(codes_np[i * nblocks : (i + 1) * nblocks],
-                                         cb, padded_shapes, blk.ANCHOR_STRIDE)
-        oi = np.flatnonzero(cgrid.reshape(-1) == 0).astype(np.int64)  # code 0 == outlier
+        if use_dev:
+            cgrid = blk.scatter_blocks_batch_jnp(jnp.asarray(codes_dev[i]), cb,
+                                                 padded_shapes, blk.ANCHOR_STRIDE)
+            oi = np.asarray(jnp.flatnonzero(cgrid.reshape(-1) == 0)).astype(np.int64)
+        else:
+            cgrid = blk.scatter_blocks_batch(codes_np[i * nblocks : (i + 1) * nblocks],
+                                             cb, padded_shapes, blk.ANCHOR_STRIDE)
+            oi = np.flatnonzero(cgrid.reshape(-1) == 0).astype(np.int64)  # code 0 == outlier
         ov = _gather_flat(padded_shards[i], oi)
         yield comp._pack_interp(base_hdr, cgrid=cgrid, anc=anc_np[i], oi=oi, ov=ov,
                                 stride=stride, splines=splines, schemes=schemes)

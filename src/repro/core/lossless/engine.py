@@ -1,0 +1,461 @@
+"""Device-resident lossless encoding engine (jit/Pallas stage kernels).
+
+Every numpy stage in this package is a *reference implementation*; this
+module gives the hot ones a jit-compiled device twin with a **bit-identity
+contract**: for the same input stream, ``<stage>_encode_device`` returns a
+payload byte-for-byte equal to the numpy encoder's, so device-encoded
+sections drop into existing containers (golden v1/v2/v3 fixtures included)
+and a sharded writer and a single-host writer stay interchangeable.
+
+The shape of each kernel follows the GPU literature the paper builds on
+(cuSZ's two-phase Huffman, FZ-GPU's fused shuffle-and-encode):
+
+* **hf** — frequencies come from :func:`histogram256_device` (the Pallas
+  histogram256 kernel on TPU; on the host-backed CPU device a symbol-pair
+  bincount over the same memory); the 256-leaf canonical codebook is
+  O(256 log 256) scalar work and stays on host
+  (:func:`repro.core.lossless.huffman.code_lengths`); emission is two
+  fused jits: a pair-table gather + per-chunk exclusive prefix-sum bit
+  offsets producing per-pair 32-bit word contributions, then a
+  prefix-sum/boundary-gather reduction into the big-endian word stream —
+  the same arithmetic as the numpy encoder, so the bitstream is
+  identical.
+* **rre/rze** — flag computation and MSB-first bitmap packing run on
+  device; the kept-symbol compaction is a device row-gather addressed by
+  the flag positions; only the packed bitmap (1/8k of the stream) crosses
+  to host for the tiny recursive-bitmap recursion and header assembly.
+* **bit1** — the plane shuffle runs through the Pallas bitshuffle kernel
+  on TPU and a jnp twin elsewhere (identical bit layout either way).
+* **tcms** — bytewise sign-magnitude bijection, one fused ``where``.
+
+Inputs are taken as ``jax.Array`` uint8 streams and payloads are returned
+as *device* uint8 arrays (plus the usual host header dict), so a pipeline
+of device-capable stages chains without the stream ever visiting host —
+:func:`repro.core.lossless.pipelines.encode` uses exactly that fast path.
+Beyond encoded bytes, only flag bits (n/16 bytes for Huffman word
+boundaries, n/8k for rre bitmaps) and O(1) scalars sync per stage —
+XLA:CPU scatters run an order of magnitude behind its gathers, so the
+staircase inversions those flags feed (``flatnonzero``) ride the host.
+
+Compilation is keyed on padded shapes: streams are padded to the stage's
+natural grid (Huffman chunks, 8192-symbol buckets for rre/rze/tcms,
+shuffle blocks for bit1), so nearby lengths share a compiled kernel
+instead of recompiling per byte count. Huffman additionally splits
+>2^26-symbol streams into chunk-aligned slabs, keeping every bit cursor
+inside u32 (the same slab trick — and the same byte-exact concatenation —
+as the threaded numpy encoder).
+
+Decode stays on the numpy reference path: decompression replays through
+host containers and was never the bottleneck this engine removes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import huffman as _hf
+from . import rre as _rre
+
+_U31 = jnp.uint32(31)
+_SYM_PAD = 8192        # rre/rze/tcms row-padding granularity (bounds recompiles)
+_SLAB_CHUNKS = 1 << 16  # 2^26 symbols per hf slab: bit cursors stay in u32
+_BIT1_BLOCK = 8192      # host bitshuffle.BLOCK — the layout the payload pins
+
+
+def is_device(x) -> bool:
+    """True for jax device arrays (the fast-path trigger); numpy is host."""
+    return isinstance(x, jax.Array) and not isinstance(x, np.ndarray)
+
+
+def as_device_u8(x) -> jax.Array:
+    """Flat uint8 device view of ``x`` (cast, like ``ascontiguousarray``)."""
+    arr = x if is_device(x) else jnp.asarray(np.ascontiguousarray(x))
+    if arr.dtype != jnp.uint8:
+        arr = arr.astype(jnp.uint8)
+    return arr.reshape(-1)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------- histogram
+def histogram256_device(data) -> np.ndarray:
+    """Exact 256-bin counts of a uint8 stream (host ``np.int64``).
+
+    Compiled on TPU this is the Pallas histogram256 kernel (one-hot
+    contraction per tile); on the CPU backend, device memory IS host
+    memory (``np.asarray`` is zero-copy), so the counts come from a
+    symbol-PAIR ``np.bincount`` over the u16 view folded back to 256 bins
+    — ~6x faster than a byte-wise bincount because it halves the element
+    count fed through numpy's index conversion. Counts equal
+    ``np.bincount`` exactly (they are integers), which is what keeps the
+    orchestrator's pipeline choice identical between host and device
+    paths.
+    """
+    d = as_device_u8(data)
+    if _on_tpu():
+        from repro.kernels.histogram.histogram import TILE, histogram256_raw
+
+        pad = (-d.size) % TILE
+        if pad:
+            d = jnp.concatenate([d, jnp.zeros(pad, jnp.uint8)])
+        hist = histogram256_raw(d, False)
+        if pad:
+            hist = hist.at[0].add(-pad)
+        return np.asarray(hist, np.int64)
+    dn = np.asarray(d)
+    n2 = dn.size & ~1
+    if n2 >= (2 << 20):  # split across the shared pool like huffman.encode
+        from .huffman import _executor
+
+        k = (n2 // 2) & ~1
+        parts = list(_executor().map(_hist_pairs_np, (dn[:k], dn[k:n2])))
+        hist = parts[0] + parts[1]
+    else:
+        hist = _hist_pairs_np(dn[:n2]) if n2 else np.zeros(256, np.int64)
+    if dn.size != n2:
+        hist = hist.copy()
+        hist[dn[-1]] += 1
+    return hist.astype(np.int64)
+
+
+# ----------------------------------------------------------------------- hf
+#
+# The emission is the two-phase GPU Huffman recast for XLA: phase A is a
+# fused gather/scan kernel producing per-pair word contributions and
+# per-chunk sizes; phase B reduces contributions into the 32-bit big-endian
+# word stream with gathers against an *exclusive prefix sum* — the same
+# cumsum-and-boundary-gather identity as the numpy `_segment_sum`, chosen
+# because XLA:CPU scatters are an order of magnitude slower than its
+# gathers. The word-boundary table (`bounds[j]` = first pair whose bits
+# start in word j) rides a small host assist: pair starts are at most 32
+# bits apart inside a chunk, so every word contains a pair start and the
+# boundary flags — 1 bit per pair — are simply `flatnonzero`'d on host
+# (plus a rare one-word-skip repair at byte-aligned chunk seams, detected
+# from per-chunk scalars). Only those flags (n/16 bytes) and O(nck)
+# scalars cross to host mid-encode.
+
+def _pair_tables(lens: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """(65536, 2) per-symbol-PAIR merge table: [v2, l2] rows.
+
+    Indexed by the little-endian u16 view of two adjacent stream bytes, so
+    the whole reduce-merge becomes ONE row gather (gather cost on XLA:CPU
+    is index-bound, so fetching both fields per index beats two gathers).
+    512 KiB, built once per codebook with vectorized numpy.
+    """
+    i = np.arange(65536, dtype=np.uint32)
+    s0, s1 = i & 255, i >> 8
+    l0, l1 = lens[s0].astype(np.uint32), lens[s1].astype(np.uint32)
+    tblv = (codes[s0] << l1) | codes[s1]
+    # i32 lanes throughout (XLA:CPU scalarizes u8/u16 arithmetic)
+    return np.stack([tblv.view(np.int32), (l0 + l1).astype(np.int32)], axis=1)
+
+
+@jax.jit
+def _hf_emit_a(dp: jax.Array, tblc: jax.Array):
+    """Phase A over full chunks (no pad lanes): per-pair contributions.
+
+    Returns the pair values `v2`, their in-word contributions `hi`, the
+    shift state `sh` (phase B rebuilds the rare spill words from v2/sh by
+    gather instead of materializing a full `lo` array), `first`
+    word-boundary flags, per-chunk payload bytes, chunk byte offsets, and
+    each chunk's last pair-start word (for the seam-skip repair).
+    """
+    m = dp.shape[0]
+    nck = m // _hf.CHUNK
+    half = _hf.CHUNK // 2
+    dpair = jax.lax.bitcast_convert_type(dp.reshape(-1, 2), jnp.uint16)
+    idx = dpair.astype(jnp.int32)
+    pair = tblc[idx]  # (npairs, 2) i32 rows: [v2, l2]
+    v2 = jax.lax.bitcast_convert_type(pair[:, 0], jnp.uint32)
+    l2 = pair[:, 1]
+    # per-chunk bit offsets from the pair-length prefix sum (sums < 2^14);
+    # 16-wide two-level scan keeps the sequential pass count low
+    l2c = l2.reshape(nck, half)
+    c16 = jnp.cumsum(l2c.reshape(nck, half // 16, 16), axis=2)
+    blk = jnp.cumsum(c16[:, :, -1], axis=1)
+    boff = jnp.concatenate([jnp.zeros((nck, 1), jnp.int32), blk[:, :-1]], axis=1)
+    cum2 = (c16 + boff[:, :, None]).reshape(nck, half)
+    chunk_bytes = (cum2[:, -1] + 7) >> 3
+    byte_off = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(chunk_bytes)])
+    within = cum2 - l2c  # exclusive bit offset of each pair in its chunk
+    # bitpos = within + byte_off*8; only (bitpos & 31) and (bitpos >> 5)
+    # are needed, and both split into chunk-scalar + lane arithmetic
+    base8 = ((byte_off[:-1] & 3) << 3)[:, None]
+    sh = (((within + base8) & 31) + l2c).reshape(-1)  # <= 63
+    sh32 = sh.astype(jnp.uint32)
+    lo = v2 << ((jnp.uint32(0) - sh32) & _U31)
+    hi = jnp.where(sh > 32, v2 >> (sh32 & _U31), lo)
+    # word-boundary flags: pair i starts a new word iff pair i-1 ran to or
+    # past its word's end (sh >= 32; valid because full-chunk pairs always
+    # have l2 >= 2). Chunk seams reset the recurrence and are repaired
+    # with an nck-sized scatter against the previous chunk's last word.
+    wstart = byte_off[:-1] >> 2
+    last_w = wstart + ((within[:, -1] + base8[:, 0]) >> 5)
+    seam = jnp.concatenate([jnp.ones(1, bool), wstart[1:] > last_w[:-1]])
+    first = jnp.concatenate([jnp.ones(1, bool), sh[:-1] >= 32])
+    first = first.at[jnp.arange(nck) * half].set(seam)
+    return v2, hi, sh.astype(jnp.uint16), first, chunk_bytes, byte_off, last_w
+
+
+@jax.jit
+def _hf_emit_b(v2, hi, sh, bounds, bad, chunk_bytes):
+    """Phase B: word stream from contributions + boundary table.
+
+    ``bounds``: (alloc+1,) i32, first-pair index per word (alloc >= words
+    used; tail entries = npairs). ``bad``: words that must NOT take the
+    spill of pair ``bounds[j]-1`` (the word after a seam skip), padded
+    with out-of-range indices. Word j = sum of hi over its pairs (disjoint
+    bits, so sum == OR) | the spill of the last pair of word j-1 — the
+    spill is a sparse gather from (v2, sh), never a dense array. Returns
+    (bits bytes padded to the word allocation, chunk-size u16 bytes).
+    """
+    c16 = jnp.cumsum(hi.reshape(-1, 16), axis=1)
+    blko = jnp.concatenate([jnp.zeros(1, jnp.uint32), jnp.cumsum(c16[:, -1])[:-1]])
+    csum = (c16 + blko[:, None]).reshape(-1)  # inclusive prefix sum of hi
+
+    b = bounds
+    bm1 = jnp.maximum(b - 1, 0)
+    g = jnp.where(b > 0, csum[bm1], jnp.uint32(0))  # exclusive sum at b
+    words = g[1:] - g[:-1]
+    p = bm1[:-1]
+    shp = sh[p].astype(jnp.uint32)
+    lop = jnp.where(shp > 32, v2[p] << ((jnp.uint32(0) - shp) & _U31), jnp.uint32(0))
+    sp = jnp.where(b[:-1] > 0, lop, jnp.uint32(0))
+    sp = sp.at[bad].set(jnp.uint32(0), mode="drop")
+    words = words | sp
+    # big-endian byte order fused into the same pass as the reduction
+    wbe = (
+        ((words & 0xFF) << 24)
+        | ((words & 0xFF00) << 8)
+        | ((words >> 8) & 0xFF00)
+        | (words >> 24)
+    )
+    bits = jax.lax.bitcast_convert_type(wbe, jnp.uint8).reshape(-1)
+    cb = jax.lax.bitcast_convert_type(
+        chunk_bytes.astype(jnp.uint16), jnp.uint8
+    ).reshape(-1)
+    return bits, cb
+
+
+def _slab_bridge(emit_a_out, m: int):
+    """Host assist + phase-B dispatch for one slab's phase-A outputs.
+
+    Builds the word-boundary table from the flag bits and the per-chunk
+    scalars (see the section comment); the ``np.asarray`` pulls block on
+    this slab's phase A only, so other slabs' device work keeps running.
+    """
+    nck = m // _hf.CHUNK
+    v2, hi, sh, first, chunk_bytes, byte_off, last_w = emit_a_out
+    firsts = np.flatnonzero(np.asarray(first)).astype(np.int32)
+    bo = np.asarray(byte_off)
+    lws = np.asarray(last_w)
+    total = int(bo[-1])
+    nwords = (total + 3) >> 2
+    # seam skips: chunk payloads are byte- (not word-) aligned, so the gap
+    # between the last pair start of chunk c-1 and the first of chunk c can
+    # reach 39 bits and hop over one word entirely
+    fw = (bo[:-1] >> 2).astype(np.int64)
+    skip_mask = fw[1:] >= lws[:-1].astype(np.int64) + 2
+    skip_words = fw[1:][skip_mask] - 1
+    ins = (skip_words - np.arange(skip_words.size)).astype(np.int64)
+    bounds_core = np.insert(firsts, ins, firsts[ins]) if ins.size else firsts
+    # bucketed word allocation: jit shapes recompile per bucket, not per byte
+    nw = m // 2
+    wbucket = max(nw // 8, 4096)
+    alloc = min(-(-max(nwords, 1) // wbucket) * wbucket, nw)
+    bounds = np.empty(alloc + 1, np.int32)
+    bounds[: bounds_core.size] = bounds_core
+    bounds[bounds_core.size :] = nw
+    bad = np.full(max(nck, 1), alloc + 1, np.int32)  # out of range: dropped
+    bad[: skip_words.size] = (skip_words + 1).astype(np.int32)
+    bits, cb = _hf_emit_b(v2, hi, sh, jnp.asarray(bounds), jnp.asarray(bad), chunk_bytes)
+    return bits[:total], cb
+
+
+def _hist_pairs_np(dn: np.ndarray) -> np.ndarray:
+    c = np.bincount(dn.view(np.uint16), minlength=65536).reshape(256, 256)
+    return c.sum(axis=0) + c.sum(axis=1)
+
+
+_PAR_SLAB = 1 << 21  # symbols per thread-parallel slab on the CPU backend
+
+
+def hf_encode_device(data):
+    """Device Huffman encode; payload bytes == ``huffman.encode``'s.
+
+    Streams larger than ``_PAR_SLAB`` split into chunk-aligned slabs whose
+    phase-A kernels are all dispatched before any bridge blocks — XLA
+    drains the queue asynchronously, so slab i's host assist hides behind
+    slab i+1's device work. Slab payloads concatenate byte-exactly (the
+    same chunk-aligned-split property the threaded numpy encoder relies
+    on), and each slab's bit cursors stay inside u32.
+    """
+    d = as_device_u8(data)
+    n = int(d.size)
+    hist = histogram256_device(d)
+    lens = _hf.code_lengths(hist)
+    codes, lens, *_ = _hf.canonical_codes(lens)
+    tbl_np = (lens.astype(np.uint32) << np.uint32(16)) | codes
+    n_full = (n // _hf.CHUNK) * _hf.CHUNK
+    cb_parts, bit_parts = [], []
+    if n_full:
+        tblc = jnp.asarray(_pair_tables(lens, codes))
+        slab_syms = min(_PAR_SLAB, _SLAB_CHUNKS * _hf.CHUNK)  # u32 cursors
+        slab_syms = max(slab_syms - slab_syms % _hf.CHUNK, _hf.CHUNK)  # chunk-aligned
+        cuts = list(range(0, n_full, slab_syms)) + [n_full]
+        # dispatch every slab's phase A up front — XLA executes the queue
+        # concurrently, so slab i's host bridge hides behind slab i+1's
+        # device work (the async twin of the numpy encoder's thread slabs)
+        outs = [(_hf_emit_a(d[a:b], tblc), b - a) for a, b in zip(cuts, cuts[1:])]
+        for out, m in outs:
+            bits, cb = _slab_bridge(out, m)
+            cb_parts.append(cb)
+            bit_parts.append(bits)
+    if n > n_full or n == 0:  # partial/empty tail chunk: reference encoder
+        tail_bits, tail_cb = _hf._encode_slab(np.asarray(d[n_full:]), tbl_np)
+        cb_parts.append(jnp.asarray(np.frombuffer(tail_cb.tobytes(), np.uint8)))
+        bit_parts.append(jnp.asarray(np.frombuffer(tail_bits, np.uint8)))
+    payload = jnp.concatenate([jnp.asarray(lens)] + cb_parts + bit_parts)
+    return payload, {"n": n}
+
+
+# ------------------------------------------------------------------ rre/rze
+@functools.partial(jax.jit, static_argnums=(2,))
+def _rr_flags(viewp: jax.Array, nsym: jax.Array, zero_mode: bool):
+    """Flags + packed bitmap for RRE (``zero_mode=False``) / RZE.
+
+    ``viewp``: (nsym_p, k) u8 rows, nsym_p % 8 == 0, rows past ``nsym``
+    zero. Returns (flags, MSB-first packed bitmap over nsym_p flags).
+    """
+    nsym_p = viewp.shape[0]
+    v32 = viewp.astype(jnp.int32)  # i32 lanes: XLA:CPU scalarizes u8 math
+    if zero_mode:
+        flags = (v32 != 0).any(axis=1)
+    else:
+        flags = jnp.concatenate(
+            [jnp.ones(1, bool), (v32[1:] != v32[:-1]).any(axis=1)]
+        )
+    flags = flags & (jnp.arange(nsym_p) < nsym)
+    # MSB-first bit packing (np.packbits layout)
+    wts = jnp.left_shift(jnp.int32(1), 7 - jax.lax.iota(jnp.int32, 8))
+    bitmap = (flags.reshape(-1, 8) * wts).sum(axis=1).astype(jnp.uint8)
+    return flags, bitmap
+
+
+@jax.jit
+def _rr_gather(viewp: jax.Array, idx: jax.Array):
+    return viewp[idx]
+
+
+def _rr_encode_device(data, k: int, zero_mode: bool):
+    d = as_device_u8(data)
+    n = int(d.size)
+    nsym = -(-n // k)
+    if nsym == 0:
+        z = np.zeros(0, np.uint8)
+        payload, header = _rre._serialize(z, [], [], z, n, k, 0)
+        return jnp.asarray(np.frombuffer(payload, np.uint8)), header
+    nsym_p = -(-nsym // _SYM_PAD) * _SYM_PAD  # row bucket: bounds recompiles
+    pad = nsym_p * k - n
+    if pad:
+        d = jnp.concatenate([d, jnp.zeros(pad, jnp.uint8)])
+    viewp = d.reshape(nsym_p, k)
+    flags, bitmap_p = _rr_flags(viewp, jnp.int32(nsym), zero_mode)
+    # kept-row compaction: the scan's output indices are the flag
+    # positions; flatnonzero rides the host (XLA:CPU scatters are slow,
+    # its gathers are not), the row gather stays on device
+    kept_idx = np.flatnonzero(np.asarray(flags))
+    count = int(kept_idx.size)
+    alloc = max(-(-count // _SYM_PAD) * _SYM_PAD, _SYM_PAD)
+    idx = np.zeros(alloc, np.int32)
+    idx[:count] = kept_idx
+    kept_p = _rr_gather(viewp, jnp.asarray(idx))
+    # the packed bitmap (1/8k of the stream) is all the host recursion needs
+    bitmap = np.asarray(bitmap_p)[: (nsym + 7) // 8]
+    top, levels, sizes = _rre._compress_bitmap(bitmap)
+    header = {"n": n, "k": k, "nsym": nsym}
+    meta = (
+        np.asarray([top.size, len(levels)], "<u2").tobytes()
+        + np.asarray(list(sizes) + [lv.size for lv in levels], "<u8").tobytes()
+    )
+    head = meta + top.tobytes() + b"".join(lv.tobytes() for lv in levels)
+    payload = jnp.concatenate(
+        [jnp.asarray(np.frombuffer(head, np.uint8)), kept_p[:count].reshape(-1)]
+    )
+    return payload, header
+
+
+def rre_encode_device(data, k: int):
+    """Device RRE-k; payload bytes == ``rre.rre_encode``'s."""
+    return _rr_encode_device(data, k, zero_mode=False)
+
+
+def rze_encode_device(data, k: int):
+    """Device RZE-k; payload bytes == ``rre.rze_encode``'s."""
+    return _rr_encode_device(data, k, zero_mode=True)
+
+
+# --------------------------------------------------------------------- tcms
+@jax.jit
+def _tcms_core(viewp: jax.Array) -> jax.Array:
+    """Bytewise two's-complement -> sign-magnitude over little-endian rows."""
+    v = viewp.astype(jnp.int32)  # i32 lanes; ~x bytewise == 255 - x
+    neg = (v[:, -1] & 0x80) != 0
+    out = jnp.where(neg[:, None], 255 - v, v)
+    out = out.at[:, -1].set(jnp.where(neg, out[:, -1] ^ 0x80, out[:, -1]))
+    return out.astype(jnp.uint8)
+
+
+def tcms_encode_device(data, k: int):
+    """Device TCMS-k; payload bytes == ``tcms.tcms_encode``'s."""
+    d = as_device_u8(data)
+    n = int(d.size)
+    nsym = -(-n // k) if n else 0
+    nsym_p = max(-(-nsym // _SYM_PAD) * _SYM_PAD, _SYM_PAD)
+    pad = nsym_p * k - n
+    if pad:
+        d = jnp.concatenate([d, jnp.zeros(pad, jnp.uint8)])
+    out = _tcms_core(d.reshape(nsym_p, k))[:nsym]
+    return out.reshape(-1), {"n": n, "k": k}
+
+
+# --------------------------------------------------------------------- bit1
+@jax.jit
+def _bit1_core(arr: jax.Array) -> jax.Array:
+    """jnp twin of the bitshuffle plane transpose (np.packbits bit layout)."""
+    nb, block = arr.shape
+    shifts = (7 - jnp.arange(8, dtype=jnp.uint8))[None, :, None]
+    bits = (arr[:, None, :] >> shifts) & 1  # (nb, 8, block) u8
+    g = bits.reshape(nb, 8, block // 8, 8)
+    w = jnp.left_shift(jnp.int32(1), 7 - jax.lax.iota(jnp.int32, 8))
+    packed = jnp.einsum("npgb,b->npg", g, w, preferred_element_type=jnp.int32)
+    return packed.reshape(nb, block).astype(jnp.uint8)
+
+
+def bit1_encode_device(data, block: int = _BIT1_BLOCK):
+    """Device BIT1; payload bytes == ``bitshuffle.bitshuffle_encode``'s.
+
+    Compiled on TPU this is the Pallas bitshuffle kernel; elsewhere the jnp
+    twin (same arithmetic, no interpret-mode overhead). Both produce the
+    host encoder's 8192-byte-block plane layout.
+    """
+    d = as_device_u8(data)
+    n = int(d.size)
+    if n == 0:
+        return jnp.zeros(0, jnp.uint8), {"n": 0, "block": int(block)}
+    pad = (-n) % block
+    if pad:
+        d = jnp.concatenate([d, jnp.zeros(pad, jnp.uint8)])
+    arr = d.reshape(-1, block)
+    if _on_tpu():
+        from repro.kernels.bitshuffle.bitshuffle import bitshuffle_pallas_raw
+
+        planes = bitshuffle_pallas_raw(arr, False, tile_blocks=1)
+    else:
+        planes = _bit1_core(arr)
+    return planes.reshape(-1), {"n": n, "block": int(block)}

@@ -55,7 +55,18 @@ _TABLE = _LEGACY_MAXLEN  # canonical tables sized for the legacy maximum
 
 _U0, _U1, _U5, _U8, _U16, _U31, _U32 = (np.uint32(x) for x in (0, 1, 5, 8, 16, 31, 32))
 
-_NWORKERS = max(1, min(4, os.cpu_count() or 1))
+def _nworkers() -> int:
+    """Slab-encode worker count: REPRO_HF_WORKERS overrides the cpu-based
+    default (useful to pin benchmarks or to serialize under oversubscribed
+    schedulers); invalid or non-positive values fall back to the default."""
+    try:
+        env = int(os.environ.get("REPRO_HF_WORKERS", "0"))
+    except ValueError:
+        env = 0
+    return env if env > 0 else max(1, min(4, os.cpu_count() or 1))
+
+
+_NWORKERS = _nworkers()
 _PAR_MIN = 1 << 20  # encode bytes below this stay single-threaded
 _SLAB_SYMS = 1 << 26  # keeps per-slab bit offsets < 2^30 (int32-view-safe)
 _DECODE_GROUP_BYTES = 1 << 28  # payload span per u32-cursor decode group
@@ -71,9 +82,16 @@ def _executor() -> ThreadPoolExecutor:
 
 def _reset_pool() -> None:
     """Drop the inherited pool in forked children: its worker threads do not
-    survive fork, so reusing it would deadlock the next threaded encode."""
-    global _pool
+    survive fork, so reusing it would deadlock the next threaded encode.
+
+    Registered via os.register_at_fork below — callers never need to (and
+    must not be relied upon to) invoke this themselves; any fork started
+    by any library picks up the cleanup automatically. The worker count is
+    also re-read so a child can resize via REPRO_HF_WORKERS before its
+    first encode."""
+    global _pool, _NWORKERS
     _pool = None
+    _NWORKERS = _nworkers()
 
 
 if hasattr(os, "register_at_fork"):  # pragma: no branch - posix

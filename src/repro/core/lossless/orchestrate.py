@@ -9,9 +9,11 @@ that exploration *online*, per field:
 1. sample the quantization-code stream (a few contiguous slices, so run
    structure survives — a strided sample would destroy it);
 2. compute cheap stream statistics — byte-histogram entropy, zero-run
-   density, outlier rate. The histogram can come from the Pallas
-   histogram256 kernel (repro.kernels.histogram) via the ``histogram``
-   hook; the numpy bincount default is the same arithmetic on host;
+   density, outlier rate. For device-array inputs the histogram comes from
+   the device engine by default (the Pallas histogram256 kernel compiled
+   on TPU — repro.kernels.histogram — via repro.core.lossless.engine); the
+   ``histogram`` hook overrides it, and the numpy bincount default for
+   host arrays is the same integer arithmetic;
 3. pre-score every registered pipeline with the per-stage ``estimate``
    cost hooks, then trial-encode the sample through the top candidates
    and pick the smallest output.
@@ -24,19 +26,32 @@ from __future__ import annotations
 
 import numpy as np
 
-from .pipelines import PIPELINES, encode, get_pipeline
+from .pipelines import PIPELINES, _is_jax, encode, get_pipeline
 from .stages import get_stage
 
 DEFAULT_SAMPLE_BYTES = 1 << 16
 _N_SLICES = 4
 
 
-def sample_stream(data: np.ndarray, sample_bytes: int = DEFAULT_SAMPLE_BYTES) -> np.ndarray:
+def sample_stream(data, sample_bytes: int = DEFAULT_SAMPLE_BYTES):
     """Contiguous multi-slice sample: _N_SLICES evenly spaced windows.
 
     Windows never overlap for data larger than the sample budget, and the
     slices stay contiguous so repeat/run statistics are representative.
+    Device arrays sample on device (pure slicing) and stay device-resident.
     """
+    if _is_jax(data):
+        from . import engine
+
+        data = engine.as_device_u8(data)
+        n = data.size
+        if n <= sample_bytes:
+            return data
+        import jax.numpy as jnp
+
+        per = sample_bytes // _N_SLICES
+        starts = [(n - per) * i // (_N_SLICES - 1) for i in range(_N_SLICES)]
+        return jnp.concatenate([data[s : s + per] for s in starts])
     data = np.ascontiguousarray(data, np.uint8).reshape(-1)
     n = data.size
     if n <= sample_bytes:
@@ -46,17 +61,37 @@ def sample_stream(data: np.ndarray, sample_bytes: int = DEFAULT_SAMPLE_BYTES) ->
     return np.concatenate([data[s : s + per] for s in starts])
 
 
-def stream_stats(sample: np.ndarray, n_total: int | None = None, histogram=None) -> dict:
+def stream_stats(sample, n_total: int | None = None, histogram=None) -> dict:
     """Cheap per-stream statistics driving the stage cost hooks.
 
     ``histogram``: optional callable mapping a uint8 array to 256 counts
-    (e.g. the Pallas histogram256 kernel); defaults to ``np.bincount``.
+    (e.g. the Pallas histogram256 kernel); when the sample is a device
+    array it defaults to :func:`repro.core.lossless.engine.
+    histogram256_device` (the Pallas kernel compiled on TPU), otherwise to
+    ``np.bincount``. The counts — and therefore every derived statistic
+    and the orchestrator's pipeline choice — are identical either way:
+    histogram counts are integers and run_frac is computed as an exact
+    integer ratio.
     """
-    sample = np.ascontiguousarray(sample, np.uint8).reshape(-1)
-    hist = np.asarray(
-        histogram(sample) if histogram is not None else np.bincount(sample, minlength=256),
-        np.int64,
-    )
+    if _is_jax(sample):
+        from . import engine
+
+        sample = engine.as_device_u8(sample)
+        if histogram is None:
+            histogram = engine.histogram256_device
+        # exact integer ratio: matches np.mean's float64 arithmetic
+        run_frac = (
+            float(int((sample[1:] == sample[:-1]).sum())) / (sample.size - 1)
+            if sample.size > 1 else 0.0
+        )
+        hist = np.asarray(histogram(sample), np.int64)
+    else:
+        sample = np.ascontiguousarray(sample, np.uint8).reshape(-1)
+        run_frac = float(np.mean(sample[1:] == sample[:-1])) if sample.size > 1 else 0.0
+        hist = np.asarray(
+            histogram(sample) if histogram is not None else np.bincount(sample, minlength=256),
+            np.int64,
+        )
     m = int(hist.sum())
     if m > 0:
         p = hist[hist > 0].astype(np.float64) / m
@@ -66,7 +101,6 @@ def stream_stats(sample: np.ndarray, n_total: int | None = None, histogram=None)
         outlier_frac = float(hist[:64].sum() + hist[192:].sum()) / m
     else:
         entropy = zero_frac = outlier_frac = 0.0
-    run_frac = float(np.mean(sample[1:] == sample[:-1])) if sample.size > 1 else 0.0
     return {
         "n": int(n_total if n_total is not None else sample.size),
         "sample_n": int(sample.size),
@@ -119,7 +153,12 @@ def _choose(
         names = sorted(PIPELINES)
     for nm in names:
         get_pipeline(nm)  # raises with the registered list on typos
-    data = np.ascontiguousarray(data, np.uint8).reshape(-1)
+    if _is_jax(data):
+        from . import engine
+
+        data = engine.as_device_u8(data)  # trials ride the device fast path
+    else:
+        data = np.ascontiguousarray(data, np.uint8).reshape(-1)
     sample = sample_stream(data, sample_bytes)
     stats = stream_stats(sample, n_total=data.size, histogram=histogram)
     est = {nm: estimate_pipeline(get_pipeline(nm), stats) for nm in names}

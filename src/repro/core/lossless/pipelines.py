@@ -12,6 +12,15 @@ cuSZ-Hi pipelines:
 ``pipeline="auto"`` (see :mod:`repro.core.lossless.orchestrate`) samples the
 stream and picks the best-fit registered pipeline per field.
 
+Device fast path: when ``encode`` receives a ``jax.Array``, each stage with
+an ``encode_device`` twin (repro.core.lossless.engine) runs jit-compiled on
+the device and the stream chains between stages as a device array — the
+bytes only land on host once, in the final packed stream. The engine's
+bit-identity contract makes the result byte-equal to the numpy path, so
+the choice of path is invisible to decoders and golden fixtures. A stage
+without a device twin (e.g. ``zstd``) drops the stream to host and the
+remaining stages run the numpy path.
+
 Stream format (v2, this module's framing): ``b"LLP2"`` magic, then one
 record per stage — flags byte (bit0 = store-through skip for stages that
 expanded the stream), name, and the stage's *binary-packed* header — then
@@ -82,14 +91,32 @@ def _resolve(pipeline) -> tuple:
     return get_pipeline(pipeline) if isinstance(pipeline, str) else tuple(pipeline)
 
 
-def encode(data: np.ndarray, pipeline: str | tuple) -> bytes:
+def _is_jax(data) -> bool:
+    """jax.Array detection without importing jax for host-only callers."""
+    return not isinstance(data, np.ndarray) and "jax" in type(data).__module__
+
+
+def encode(data, pipeline: str | tuple) -> bytes:
     stages = _resolve(pipeline)
-    cur = np.ascontiguousarray(data, np.uint8)
+    device = _is_jax(data)
+    if device:
+        from . import engine
+
+        cur = engine.as_device_u8(data)
+    else:
+        cur = np.ascontiguousarray(data, np.uint8)
     recs = []
     for name in stages:
         st = get_stage(name)
-        payload, hdr = st.encode(cur)
-        nxt = np.frombuffer(payload, np.uint8) if isinstance(payload, bytes) else payload
+        if device and st.encode_device is not None:
+            payload, hdr = st.encode_device(cur)
+            nxt = payload  # device uint8 array: the stream stays resident
+        else:
+            if device:  # host-only stage: the stream drops to host for good
+                cur = np.asarray(cur)
+                device = False
+            payload, hdr = st.encode(cur)
+            nxt = np.frombuffer(payload, np.uint8) if isinstance(payload, bytes) else payload
         hb = st.pack_header(hdr)
         if nxt.size + len(hb) >= cur.size and cur.size > 0:
             recs.append((name, 1, b""))  # stage expands: store-through
@@ -101,7 +128,7 @@ def encode(data: np.ndarray, pipeline: str | tuple) -> bytes:
     for name, flags, hb in recs:
         nb = name.encode()
         out += struct.pack("<BB", flags, len(nb)) + nb + struct.pack("<I", len(hb)) + hb
-    out += cur.tobytes()
+    out += np.asarray(cur).tobytes()
     return bytes(out)
 
 

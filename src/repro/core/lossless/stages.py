@@ -14,6 +14,11 @@ bit-plane shuffle, ...). Each stage is self-describing:
   per input byte given sampled stream statistics (see
   repro.core.lossless.orchestrate.stream_stats). The orchestrator uses
   these to rank candidate pipelines before trial-encoding.
+* ``encode_device(data) -> (payload, header)`` — optional device twin of
+  ``encode`` taking a ``jax.Array`` uint8 stream and returning a *device*
+  uint8 payload, byte-identical to ``encode``'s (the engine contract, see
+  repro.core.lossless.engine). Stages without one fall back to the numpy
+  path when a pipeline runs device-resident.
 
 Third-party stages register with :func:`register_stage` and are immediately
 usable in :func:`repro.core.lossless.pipelines.register_pipeline` — core
@@ -47,6 +52,8 @@ class Stage:
     # (checkpoints, relayed gradients) restrict auto-selection to portable
     # pipelines so they stay restorable on any machine.
     portable: bool = True
+    # device twin of encode (bit-identity contract); None = host-only stage
+    encode_device: Callable | None = None
 
 
 _REGISTRY: dict[str, Stage] = {}
@@ -69,6 +76,7 @@ def register_stage(
     pack_header: Callable[[dict], bytes] | None = None,
     unpack_header: Callable[[bytes], dict] | None = None,
     portable: bool = True,
+    encode_device: Callable | None = None,
     overwrite: bool = False,
 ) -> Stage:
     """Register a lossless stage under ``name``.
@@ -90,6 +98,7 @@ def register_stage(
         pack_header=pack_header or _json_pack,
         unpack_header=unpack_header or _json_unpack,
         portable=portable,
+        encode_device=encode_device,
     )
     _REGISTRY[name] = stage
     return stage
@@ -219,22 +228,40 @@ def _zstd_decode(payload: bytes, header: dict) -> np.ndarray:
     return np.frombuffer(zstandard.ZstdDecompressor().decompress(payload), np.uint8)
 
 
+# Device twins resolve the engine lazily: repro.core.lossless.engine pulls
+# in jax, which host-only consumers of this module never need.
+
+def _dev(fn_name: str, **fixed):
+    def call(data, _fn=fn_name, _fixed=fixed):
+        from . import engine
+
+        return getattr(engine, _fn)(data, **_fixed)
+
+    return call
+
+
 def _register_builtins() -> None:
     register_stage("hf", _hf.encode, _hf.decode, estimate=_est_hf,
-                   pack_header=_pack_hf, unpack_header=_unpack_hf)
+                   pack_header=_pack_hf, unpack_header=_unpack_hf,
+                   encode_device=_dev("hf_encode_device"))
     register_stage("bit1", _bit.bitshuffle_encode, _bit.bitshuffle_decode,
-                   estimate=_est_unit, pack_header=_pack_bit, unpack_header=_unpack_bit)
+                   estimate=_est_unit, pack_header=_pack_bit, unpack_header=_unpack_bit,
+                   encode_device=_dev("bit1_encode_device"))
     # not portable: when zstandard is installed at encode time, decoding the
-    # stream needs it too (the zlib fallback only engages when it's absent)
+    # stream needs it too (the zlib fallback only engages when it's absent);
+    # also host-only — no device twin
     register_stage("zstd", _zstd_encode, _zstd_decode, estimate=_est_zstd,
                    pack_header=_pack_zstd, unpack_header=_unpack_zstd, portable=False)
     for k in (1, 2, 4, 8):
         register_stage(f"rre{k}", (lambda d, k=k: _rre.rre_encode(d, k)), _rre.rre_decode,
-                       estimate=_est_rre(k), pack_header=_pack_rre, unpack_header=_unpack_rre)
+                       estimate=_est_rre(k), pack_header=_pack_rre, unpack_header=_unpack_rre,
+                       encode_device=_dev("rre_encode_device", k=k))
         register_stage(f"rze{k}", (lambda d, k=k: _rre.rze_encode(d, k)), _rre.rze_decode,
-                       estimate=_est_rze(k), pack_header=_pack_rre, unpack_header=_unpack_rre)
+                       estimate=_est_rze(k), pack_header=_pack_rre, unpack_header=_unpack_rre,
+                       encode_device=_dev("rze_encode_device", k=k))
         register_stage(f"tcms{k}", (lambda d, k=k: _tcms.tcms_encode(d, k)), _tcms.tcms_decode,
-                       estimate=_est_unit, pack_header=_pack_tcms, unpack_header=_unpack_tcms)
+                       estimate=_est_unit, pack_header=_pack_tcms, unpack_header=_unpack_tcms,
+                       encode_device=_dev("tcms_encode_device", k=k))
 
 
 _register_builtins()

@@ -75,6 +75,16 @@ def reorder_codes_batch(grids: np.ndarray, stride: int = ANCHOR_STRIDE, reorder:
     return grids.reshape(grids.shape[0], -1)[:, perm].reshape(-1)
 
 
+def reorder_codes_batch_device(grids, stride: int = ANCHOR_STRIDE, reorder: bool = True):
+    """Device twin of reorder_codes_batch: the cached host permutation
+    applied as one jnp gather; ``grids`` is a jax array (batch, *shape)."""
+    import jax.numpy as jnp
+
+    shape = tuple(int(s) for s in grids.shape[1:])
+    perm = level_permutation(shape, stride)[0] if reorder else flat_permutation(shape, stride)
+    return jnp.take(grids.reshape(grids.shape[0], -1), jnp.asarray(perm), axis=1).reshape(-1)
+
+
 def restore_codes_batch(seq: np.ndarray, batch: int, shape: tuple[int, ...], fill, dtype, stride: int = ANCHOR_STRIDE, reorder: bool = True) -> np.ndarray:
     """Batched inverse of reorder_codes_batch -> (batch, *shape) grids."""
     perm = level_permutation(shape, stride)[0] if reorder else flat_permutation(shape, stride)

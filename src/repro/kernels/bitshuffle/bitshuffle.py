@@ -17,8 +17,8 @@ TILE_BLOCKS = 8  # blocks per grid step
 
 
 def _kernel(x_ref, o_ref):
-    x = x_ref[...].astype(jnp.int32)  # (T, BLOCK)
-    T = x.shape[0]
+    x = x_ref[...].astype(jnp.int32)  # (T, block)
+    T, BLOCK = x.shape
     # bit p of each byte, MSB first: (T, 8, BLOCK)
     planes = jnp.stack([(x >> (7 - p)) & 1 for p in range(8)], axis=1)
     # pack each plane's BLOCK bits into BLOCK/8 bytes; weights 2^(7-b) built
@@ -29,14 +29,21 @@ def _kernel(x_ref, o_ref):
     o_ref[...] = packed.reshape(T, BLOCK).astype(jnp.uint8)
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def bitshuffle_pallas_raw(x: jnp.ndarray, interpret: bool = True):
-    """x: (nblocks, BLOCK) u8 with nblocks % TILE_BLOCKS == 0."""
-    n = x.shape[0]
-    spec = pl.BlockSpec((TILE_BLOCKS, BLOCK), lambda i: (i, 0))
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def bitshuffle_pallas_raw(x: jnp.ndarray, interpret: bool = True,
+                          tile_blocks: int = TILE_BLOCKS):
+    """x: (nblocks, block) u8 with nblocks % tile_blocks == 0.
+
+    The block size is taken from ``x.shape[1]``; the kernel body is shape-
+    generic, so the device encoding engine reuses it for the host encoder's
+    8192-byte-block layout (``tile_blocks=1``) while the default 1024-byte
+    call sites keep their 8-block tiles.
+    """
+    n, block = x.shape
+    spec = pl.BlockSpec((tile_blocks, block), lambda i: (i, 0))
     return pl.pallas_call(
         _kernel,
-        grid=(n // TILE_BLOCKS,),
+        grid=(n // tile_blocks,),
         in_specs=[spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),

@@ -74,9 +74,22 @@ def pack_quantized(q, scale, pipeline: str = "auto") -> bytes:
     gradients land on 128, matching the quantization-code law the stage
     cost hooks were built for). ``pipeline="auto"`` records the chosen
     pipeline in the header; any registered pipeline name is also accepted.
+
+    ``q`` may be a device (jax) array: the re-bias then runs on device and
+    the stream feeds the device encoding engine through the pipelines fast
+    path — bytes are identical to the host path (the engine contract).
     """
-    q = np.ascontiguousarray(np.asarray(q, np.int8))
-    stream = (q.reshape(-1).view(np.uint8) ^ np.uint8(0x80))
+    if pipelines._is_jax(q):
+        import jax.lax
+        import jax.numpy as jnp
+
+        qd = q if q.dtype == jnp.int8 else q.astype(jnp.int8)
+        shape = qd.shape
+        stream = jax.lax.bitcast_convert_type(qd.reshape(-1), jnp.uint8) ^ np.uint8(0x80)
+    else:
+        qd = np.ascontiguousarray(np.asarray(q, np.int8))
+        shape = qd.shape
+        stream = (qd.reshape(-1).view(np.uint8) ^ np.uint8(0x80))
     if pipeline == "auto":
         # portable pipelines only: the payload may be decoded on another pod
         # or archived, so it must never require an optional codec
@@ -85,7 +98,7 @@ def pack_quantized(q, scale, pipeline: str = "auto") -> bytes:
     else:
         payload = pipelines.encode(stream, pipeline)
         name = pipeline
-    hb = pack_obj({"shape": list(q.shape), "scale": float(scale), "pipeline": name})
+    hb = pack_obj({"shape": list(shape), "scale": float(scale), "pipeline": name})
     return struct.pack("<I", len(hb)) + hb + payload
 
 
@@ -102,9 +115,10 @@ def pack_quantized_sharded(q, scale, pipeline: str = "auto") -> bytes:
     """Per-device :func:`pack_quantized`, with no host gather of ``q``.
 
     ``q``: a device-sharded jax array (int8). Each *addressable* shard is
-    pulled to host individually — never the assembled global array, which
-    is what ``np.asarray`` on a sharded array would do — and packed as its
-    own container-v3 frame through the lossless orchestrator, so every
+    packed as its own container-v3 frame through the lossless orchestrator
+    — the shard stream stays device-resident through the encoding engine
+    (never the assembled global array, and not even the per-shard raw
+    stream, crosses to host; only encoded frame payloads do), so every
     device shard keeps its own best-fit pipeline choice. Replicated
     placements are deduped by shard index. The global header records each
     frame's slice of the full tensor; :func:`unpack_quantized_sharded`
@@ -128,8 +142,10 @@ def pack_quantized_sharded(q, scale, pipeline: str = "auto") -> bytes:
         "slices": [[list(b) for b in key] for key in order],
     })
     for key in order:
-        local = np.asarray(seen[key])  # device->host copy of this shard only
-        w.write_frame(pack_quantized(local, scale, pipeline))
+        # the shard stays a device array: pack_quantized re-biases it on
+        # device and the encoding engine emits the frame payload directly —
+        # the raw quantized stream never crosses to host
+        w.write_frame(pack_quantized(seen[key], scale, pipeline))
     w.close()
     return sink.getvalue()
 

@@ -73,3 +73,46 @@ def test_gradient_quantizer_error_bounded(t):
     q, scale = quantize_shard(jnp.asarray(t))
     deq = np.asarray(q, np.float32) * float(scale)
     assert np.abs(deq - t).max() <= float(scale) * 0.5 + 1e-6 + np.abs(t).max() * 1e-6
+
+
+# --------------------------------------------------------- device engine
+# Stream lengths bias toward the Huffman CHUNK boundary (the seam-repair
+# and tail-slab paths) and include empty and single-symbol streams; dtypes
+# cover the integer carriers a code stream arrives in (both paths cast to
+# uint8 with identical mod-256 semantics).
+_ENGINE_LENGTHS = st.one_of(
+    st.integers(0, 80),
+    st.integers(1020, 1030),  # straddles huffman.CHUNK == 1024
+    st.integers(2040, 2060),
+    st.integers(0, 3000),
+)
+_ENGINE_DTYPES = st.sampled_from([np.uint8, np.int32, np.int64])
+
+
+@given(
+    data=st.one_of(
+        hnp.arrays(np.uint8, _ENGINE_LENGTHS),
+        # single-symbol streams: one code, degenerate Huffman tree
+        st.tuples(st.integers(0, 255), _ENGINE_LENGTHS).map(
+            lambda t: np.full(t[1], t[0], np.uint8)
+        ),
+    ),
+    dtype=_ENGINE_DTYPES,
+)
+@settings(**SETTINGS)
+def test_engine_stage_bit_identity(data, dtype):
+    """numpy-vs-device bit-identity for EVERY registered device stage."""
+    import jax.numpy as jnp
+
+    from repro.core.lossless.stages import registered_stages
+
+    arr = data.astype(dtype)
+    dev = jnp.asarray(arr)
+    for name, stage in sorted(registered_stages().items()):
+        if stage.encode_device is None:
+            continue
+        payload, hdr = stage.encode(np.ascontiguousarray(arr, np.uint8))
+        pdev, hdev = stage.encode_device(dev)
+        ref = payload if isinstance(payload, bytes) else np.asarray(payload).tobytes()
+        assert hdev == hdr, name
+        assert np.asarray(pdev).tobytes() == ref, name
