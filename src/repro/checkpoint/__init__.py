@@ -1,2 +1,2 @@
 from .codec import decode_tensor, encode_tensor  # noqa: F401
-from .manager import AsyncCheckpointer, latest_step, restore, save  # noqa: F401
+from .manager import AsyncCheckpointer, available_steps, latest_step, restore, save  # noqa: F401

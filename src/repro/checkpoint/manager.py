@@ -2,10 +2,23 @@
 
 Layout: <dir>/step_<N>/  one file per leaf + manifest.json; writes go to a
 temp directory first, fsync'd, then atomically renamed — a crash mid-save
-never corrupts the latest checkpoint. Checkpoints are mesh-agnostic
+never corrupts the latest checkpoint. Orphaned ``.tmp_step_*`` dirs from a
+killed earlier process are swept on the next :func:`save` (live tmp dirs
+of *this* process are tracked and never touched, so the async worker and a
+final sync save cannot stomp each other). Checkpoints are mesh-agnostic
 (leaves saved unsharded-logical); restore reshards onto any mesh (elastic
 rescale). Async save runs on a daemon thread with a single-slot queue so
 training never blocks more than one pending snapshot.
+
+Damage model: every leaf file carries a whole-payload CRC32 in the
+manifest (manifest ``format`` 2; format-1 checkpoints restore unchanged,
+just without the pre-decode check). ``restore(..., strict=False)`` turns a
+damaged checkpoint into the best state still on disk instead of an
+exception: each corrupt leaf falls back to the newest earlier step whose
+copy of that leaf verifies and decodes, and a leaf with no surviving copy
+is reconstructed as zeros (or the template's value when ``tree_like``
+carries concrete arrays). What happened per leaf is reported under
+``manifest["salvage"]``.
 """
 from __future__ import annotations
 
@@ -16,13 +29,42 @@ import queue
 import shutil
 import threading
 import uuid
+import zlib
 
 import jax
 import numpy as np
 
+from repro.core.errors import CheckpointDamageError
+from repro.core.retry import retry_call
+
 from .codec import decode_tensor, encode_tensor_to
 
 _MANIFEST = "manifest.json"
+
+# tmp dirs owned by in-flight save() calls in this process; the stale
+# sweep skips these so concurrent savers (async worker + a final sync
+# save) never delete each other's work
+_live_tmp: set[str] = set()
+_live_tmp_lock = threading.Lock()
+
+
+def _sweep_stale_tmp(directory: pathlib.Path) -> list[str]:
+    """Remove orphaned ``.tmp_step_*`` dirs left by a crashed/killed save.
+
+    A tmp dir not registered by this process is assumed dead: the layout
+    is single-writer-per-directory by design (the atomic rename publish
+    relies on that already), so anything unregistered belongs to a
+    process that no longer exists. Returns the removed dir names.
+    """
+    removed = []
+    with _live_tmp_lock:
+        live = set(_live_tmp)
+    for d in directory.glob(".tmp_step_*"):
+        if str(d) in live or not d.is_dir():
+            continue
+        shutil.rmtree(d, ignore_errors=True)
+        removed.append(d.name)
+    return removed
 
 
 def _leaf_paths(tree):
@@ -40,71 +82,159 @@ def save(tree, directory: str | os.PathLike, step: int, *, eb: float = 0.0) -> d
     """Synchronous atomic save. Returns the manifest."""
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
+    _sweep_stale_tmp(directory)
     final = directory / f"step_{step:08d}"
     # unique tmp dir: concurrent savers (async worker + final sync save)
     # must never stomp each other's in-flight files
     tmp = directory / f".tmp_step_{step:08d}_{uuid.uuid4().hex[:8]}"
     tmp.mkdir(parents=True)
-    manifest = {"step": int(step), "leaves": {}, "format": 1}
-    raw_total = comp_total = 0
-    for key, leaf in _leaf_paths(tree):
-        arr = np.asarray(leaf)
-        fn = f"{key}.bin"
-        # error-bounded leaves stream v3 frames into the file as each chunk
-        # encodes, so OS writeback of earlier frames overlaps the encode of
-        # later ones; one fsync per leaf seals the file
-        with open(tmp / fn, "wb") as f:
-            meta = encode_tensor_to(f, arr, eb=eb)
+    with _live_tmp_lock:
+        _live_tmp.add(str(tmp))
+    try:
+        manifest = {"step": int(step), "leaves": {}, "format": 2}
+        raw_total = comp_total = 0
+        for key, leaf in _leaf_paths(tree):
+            arr = np.asarray(leaf)
+            fn = f"{key}.bin"
+            # error-bounded leaves stream v3 frames into the file as each chunk
+            # encodes, so OS writeback of earlier frames overlaps the encode of
+            # later ones; one fsync per leaf seals the file
+            with open(tmp / fn, "wb") as f:
+                meta = encode_tensor_to(f, arr, eb=eb)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"][key] = dict(meta, file=fn)
+            raw_total += arr.nbytes
+            comp_total += meta["bytes"]
+        manifest["raw_bytes"] = int(raw_total)
+        manifest["compressed_bytes"] = int(comp_total)
+        manifest["cr"] = round(raw_total / max(comp_total, 1), 3)
+        with open(tmp / _MANIFEST, "w") as f:
+            json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
-        manifest["leaves"][key] = dict(meta, file=fn)
-        raw_total += arr.nbytes
-        comp_total += meta["bytes"]
-    manifest["raw_bytes"] = int(raw_total)
-    manifest["compressed_bytes"] = int(comp_total)
-    manifest["cr"] = round(raw_total / max(comp_total, 1), 3)
-    with open(tmp / _MANIFEST, "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if final.exists():
-        shutil.rmtree(final)
-    os.replace(tmp, final)  # atomic publish
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)  # don't leak the partial save
+        raise
+    finally:
+        with _live_tmp_lock:
+            _live_tmp.discard(str(tmp))
     return manifest
 
 
-def latest_step(directory: str | os.PathLike) -> int | None:
+def available_steps(directory: str | os.PathLike) -> list[int]:
+    """All steps with a manifest on disk, ascending."""
     directory = pathlib.Path(directory)
     if not directory.exists():
-        return None
+        return []
     steps = []
     for d in directory.iterdir():
         if d.name.startswith("step_") and (d / _MANIFEST).exists():
             steps.append(int(d.name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def restore(tree_like, directory: str | os.PathLike, step: int | None = None, *, shardings=None):
+def latest_step(directory: str | os.PathLike) -> int | None:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _load_leaf(step_dir: pathlib.Path, meta: dict) -> np.ndarray:
+    """Read + CRC-verify + decode one leaf file; raises on any damage."""
+    payload = (step_dir / meta["file"]).read_bytes()
+    want = meta.get("crc32")
+    if want is not None:
+        got = zlib.crc32(payload) & 0xFFFFFFFF
+        if got != int(want):
+            raise CheckpointDamageError(
+                f"{meta['file']}: payload crc32 mismatch (expected {int(want):#010x}, got {got:#010x})"
+            )
+    return decode_tensor(payload, meta)
+
+
+def _zeros_like_meta(meta: dict) -> np.ndarray:
+    return np.zeros(tuple(meta["shape"]), np.dtype(meta["dtype"]))
+
+
+def restore(tree_like, directory: str | os.PathLike, step: int | None = None, *,
+            shardings=None, strict: bool = True):
     """Restore into the structure of `tree_like` (ShapeDtypeStructs ok).
 
     `shardings`: optional pytree of NamedSharding — leaves are placed
-    shard-by-shard onto the (possibly different) mesh: elastic restore."""
+    shard-by-shard onto the (possibly different) mesh: elastic restore.
+
+    ``strict=True`` (default): any damaged leaf — CRC mismatch, truncated
+    file, undecodable container — raises
+    :class:`repro.core.errors.CheckpointDamageError` (or the underlying
+    decode error). ``strict=False``: restore degrades per leaf instead.
+    Each damaged leaf falls back to the newest *earlier* step whose copy
+    of that leaf verifies; a leaf with no surviving copy anywhere is
+    reconstructed as zeros (or the template's own value when ``tree_like``
+    holds concrete arrays). The returned manifest then carries a
+    ``"salvage"`` report::
+
+        {"damaged": {key: reason, ...},        # leaves bad at the requested step
+         "fallback_steps": {key: step, ...},   # where each damaged leaf came from
+         "lost": [key, ...]}                   # leaves with no surviving copy
+    """
     directory = pathlib.Path(directory)
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {directory}")
+    older = [s for s in available_steps(directory) if s < step]
+
     d = directory / f"step_{step:08d}"
-    manifest = json.loads((d / _MANIFEST).read_text())
-    keys = [k for k, _ in _leaf_paths(tree_like)]
+    try:
+        manifest = json.loads((d / _MANIFEST).read_text())
+    except (OSError, ValueError) as e:
+        if strict or not older:
+            raise
+        # the requested step's manifest itself is gone/corrupt: restore the
+        # newest earlier step wholesale and report the demotion
+        prev = older[-1]
+        tree, manifest = restore(tree_like, directory, prev, shardings=shardings, strict=False)
+        salvage = manifest.setdefault("salvage", {"damaged": {}, "fallback_steps": {}, "lost": []})
+        salvage["damaged"]["<manifest>"] = f"step {step} manifest unreadable: {e!r}"
+        salvage["fallback_steps"]["<manifest>"] = prev
+        return tree, manifest
+
+    template = _leaf_paths(tree_like)
+    keys = [k for k, _ in template]
     flat_sh = [None] * len(keys)
     if shardings is not None:
         flat_sh = [s for _, s in _leaf_paths(shardings)]
+    salvage = {"damaged": {}, "fallback_steps": {}, "lost": []}
     leaves = []
-    for key, sh in zip(keys, flat_sh):
+    for (key, tmpl), sh in zip(template, flat_sh):
         meta = manifest["leaves"][key]
-        payload = (d / meta["file"]).read_bytes()
-        arr = decode_tensor(payload, meta)
+        try:
+            arr = _load_leaf(d, meta)
+        except Exception as e:  # noqa: BLE001 - every damage mode funnels into the salvage path
+            if strict:
+                raise
+            salvage["damaged"][key] = repr(e)
+            arr = None
+            for prev in reversed(older):  # newest surviving copy wins
+                pd = directory / f"step_{prev:08d}"
+                try:
+                    pmanifest = json.loads((pd / _MANIFEST).read_text())
+                    arr = _load_leaf(pd, pmanifest["leaves"][key])
+                except Exception:  # noqa: BLE001 - that step's copy is damaged too; keep walking back
+                    continue
+                salvage["fallback_steps"][key] = prev
+                break
+            if arr is None:
+                salvage["lost"].append(key)
+                if hasattr(tmpl, "shape") and not isinstance(tmpl, jax.ShapeDtypeStruct):
+                    arr = np.asarray(tmpl)
+                else:
+                    arr = _zeros_like_meta(meta)
         leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    if salvage["damaged"]:
+        manifest = dict(manifest, salvage=salvage)
     treedef = jax.tree_util.tree_structure(tree_like)
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest
 
@@ -117,6 +247,10 @@ class AsyncCheckpointer:
     ``submit``: :meth:`wait` (drain) and :meth:`close` (the sync point
     before a final synchronous save) both re-raise the stored exception
     *object*, so the original worker-thread traceback is preserved on it.
+    Saves are retried through :func:`repro.core.retry.retry_call` — a
+    transient ``OSError`` (NFS blip, ENOSPC race) costs a backoff, not
+    the snapshot; the partial tmp dir of a failed attempt is swept by the
+    retry's own :func:`save`.
     """
 
     def __init__(self, directory: str | os.PathLike, *, eb: float = 0.0):
@@ -124,6 +258,8 @@ class AsyncCheckpointer:
         self.eb = eb
         self._q: queue.Queue = queue.Queue(maxsize=1)
         self._err: Exception | None = None
+        self._submit_lock = threading.Lock()
+        self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -134,7 +270,7 @@ class AsyncCheckpointer:
                 if item is None:
                     return
                 tree, step = item
-                save(tree, self.directory, step, eb=self.eb)
+                retry_call(lambda: save(tree, self.directory, step, eb=self.eb))
             except Exception as e:  # noqa: BLE001 - stored with its traceback, re-raised on wait/close
                 self._err = e
             finally:
@@ -147,16 +283,24 @@ class AsyncCheckpointer:
 
     def submit(self, tree, step: int):
         self._raise_pending()
+        if self._closed:
+            raise RuntimeError("submit() on a closed AsyncCheckpointer")
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot now
-        try:
-            self._q.put_nowait((host_tree, step))
-        except queue.Full:
-            try:
-                self._q.get_nowait()  # drop the stale pending snapshot
-                self._q.task_done()
-            except queue.Empty:
-                pass
-            self._q.put_nowait((host_tree, step))
+        # serialize submitters: the old drop-then-put could race two callers
+        # into a Full queue (both drop, both put, second put explodes) or
+        # drop the snapshot a concurrent caller just queued without
+        # replacing it
+        with self._submit_lock:
+            while True:
+                try:
+                    self._q.put_nowait((host_tree, step))
+                    return
+                except queue.Full:
+                    try:
+                        self._q.get_nowait()  # drop the stale pending snapshot
+                        self._q.task_done()
+                    except queue.Empty:
+                        pass  # the worker grabbed it first; slot is free now
 
     def wait(self):
         """Block until every submitted snapshot is saved (or failed), then
@@ -164,7 +308,18 @@ class AsyncCheckpointer:
         self._q.join()
         self._raise_pending()
 
-    def close(self):
-        self._q.put(None)
-        self._thread.join(timeout=60)
+    def close(self, timeout: float = 60.0):
+        """Drain, stop the worker, surface any stored error. Idempotent —
+        a second close is a no-op (beyond re-raising a pending error).
+        Raises :class:`TimeoutError` if the worker fails to exit within
+        ``timeout`` seconds instead of silently abandoning the join."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+            self._thread.join(timeout=timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"AsyncCheckpointer worker did not exit within {timeout}s; "
+                    "a save may still be in flight"
+                )
         self._raise_pending()

@@ -73,6 +73,7 @@ import numpy as np
 from . import blocks as blk
 from . import frames as frames_mod
 from . import lorenzo as lor
+from .errors import ContainerError, DamageReport, FrameCRCError
 from .autotune import DEFAULT_STRIDES, autotune, autotune_plan, levels_for_stride
 from .lossless import orchestrate, pipelines
 from .lossless.flenc import fl_decode, fl_encode
@@ -209,6 +210,30 @@ class Compressor:
         # PredictorPlan with its scored alternatives (observability only;
         # the container header records everything decode needs).
         self.last_plan = None
+        # Per-call observability of the fault-tolerance layer:
+        #   last_telemetry — reset by compress(); records the requested
+        #     backend/engine plus every fallback the ladder took
+        #     (pallas predictor -> jax, device encode/reorder/pack ->
+        #     numpy). The bit-identity contract makes fallbacks invisible
+        #     in the output bytes, so this dict is how degradation stays
+        #     observable.
+        #   last_damage — reset by decompress(); under on_error="skip"/
+        #     "fill" records the DamageReport and the per-chunk intact
+        #     mask of a salvaged v3 container (None = fully intact).
+        self.last_telemetry = None
+        self.last_damage = None
+        self._telemetry_hold = False  # multi-chunk producers accumulate
+
+    def _telemetry(self) -> dict:
+        if self.last_telemetry is None:
+            self.last_telemetry = {"backend": self.spec.backend, "engine": self.spec.engine,
+                                   "fallbacks": []}
+        return self.last_telemetry
+
+    def _record_fallback(self, point: str, src: str, dst: str, err: Exception) -> None:
+        self._telemetry()["fallbacks"].append(
+            {"point": point, "from": src, "to": dst, "error": repr(err)}
+        )
 
     # ------------------------------------------------------------------ utils
     def _abs_eb(self, x: np.ndarray) -> float:
@@ -227,6 +252,9 @@ class Compressor:
 
     # -------------------------------------------------------------- compress
     def compress(self, x: np.ndarray) -> bytes:
+        if not self._telemetry_hold:
+            self.last_telemetry = None
+        self._telemetry()
         sp = self.spec
         x = np.ascontiguousarray(x, np.float32)
         eb_abs = self._abs_eb(x)
@@ -260,14 +288,29 @@ class Compressor:
         the stream already has. Either way the payload bytes are identical
         (the engine's bit-identity contract), so the header carries no
         engine field and decode never knows.
+
+        Fallback ladder: a device-engine failure (lowering, OOM, a dead
+        accelerator) pulls the stream to host and retries the numpy
+        reference path — bit-identical output, recorded in
+        ``last_telemetry`` so the degradation is observable, never silent.
         """
         sp = self.spec
         is_dev = pipelines._is_jax(seq)
         if sp.engine == "device" and not is_dev:
-            seq = jnp.asarray(np.ascontiguousarray(seq, np.uint8))
+            try:
+                seq = jnp.asarray(np.ascontiguousarray(seq, np.uint8))
+            except Exception as e:  # device placement itself failed
+                self._record_fallback("encode", "device", "numpy", e)
         elif sp.engine == "numpy" and is_dev:
             seq = np.asarray(seq)
         if sp.pipeline != "auto":
+            try:
+                return pipelines.encode(seq, sp.pipeline), {"pipeline": sp.pipeline}
+            except Exception as e:
+                if not pipelines._is_jax(seq):
+                    raise  # host reference path: a real error, not a device fault
+                self._record_fallback("encode", "device", "numpy", e)
+                seq = np.asarray(seq)
             return pipelines.encode(seq, sp.pipeline), {"pipeline": sp.pipeline}
         histogram = None
         if sp.backend == "pallas" and not pipelines._is_jax(seq):
@@ -277,9 +320,21 @@ class Compressor:
 
             interpret = jax.devices()[0].platform != "tpu"
             histogram = lambda d: histogram256_pallas(d, interpret=interpret)  # noqa: E731
-        payload, record = orchestrate.encode_auto(
-            seq, candidates=sp.pipeline_candidates, histogram=histogram
-        )
+        try:
+            payload, record = orchestrate.encode_auto(
+                seq, candidates=sp.pipeline_candidates, histogram=histogram
+            )
+        except Exception as e:
+            if pipelines._is_jax(seq):
+                self._record_fallback("encode", "device", "numpy", e)
+                seq, histogram = np.asarray(seq), None
+            elif histogram is not None:  # pallas histogram hook failed
+                self._record_fallback("histogram", "pallas", "numpy", e)
+                histogram = None
+            else:
+                raise
+            payload, record = orchestrate.encode_auto(seq, candidates=sp.pipeline_candidates,
+                                                      histogram=histogram)
         return payload, {"pipeline": record["pipeline"], "pchoice": record}
 
     @staticmethod
@@ -292,13 +347,43 @@ class Compressor:
         why a plan costs the container nothing over a fixed spec.
 
         v3 (chunked) containers return the global header plus a ``frames``
-        list with each frame's inspect dict and byte size.
+        list with each frame's inspect dict and byte size, a per-frame
+        ``frame_crc_ok`` mask, and — for damaged streams — a ``damage``
+        :class:`~repro.core.errors.DamageReport` (inspect never raises for
+        frame-level damage; it is the damage-assessment tool).
         """
         if frames_mod.is_v3(buf):
-            header, table = frames_mod.frame_table(buf)
-            out = dict(header, n_frames=len(table), frame_bytes=[size for _, size, _ in table])
+            try:
+                header, table = frames_mod.frame_table(buf)
+            except ContainerError:
+                # structurally damaged stream: report what a salvage pass
+                # would recover instead of refusing to look at it
+                header = frames_mod.read_header(buf)
+                good, report = frames_mod.scan_frames(buf)
+                out = dict(header, n_frames=len(good), frame_bytes=[len(p) for _, p in good],
+                           frame_indices=[i for i, _ in good], damage=report)
+                if header.get("kind") == "chunks":
+                    out["frames"] = [Compressor.inspect(p) for _, p in good]
+                return out
+            crc_ok, payloads = [], []
+            for t in table:
+                try:
+                    payloads.append(frames_mod.read_frame(buf, t))
+                    crc_ok.append(True)
+                except FrameCRCError:
+                    payloads.append(None)
+                    crc_ok.append(False)
+            out = dict(header, n_frames=len(table), frame_bytes=[size for _, size, _ in table],
+                       frame_crc_ok=crc_ok)
+            if not all(crc_ok):
+                report = DamageReport(declared_frames=len(table), frames_ok=sum(crc_ok),
+                                      frames_damaged=len(table) - sum(crc_ok))
+                for i, ok in enumerate(crc_ok):
+                    if not ok:
+                        report.add("crc", table[i][0], index=i, detail="payload CRC32 mismatch")
+                out["damage"] = report
             if header.get("kind") == "chunks":  # frames are themselves containers
-                out["frames"] = [Compressor.inspect(frames_mod.read_frame(buf, t)) for t in table]
+                out["frames"] = [None if p is None else Compressor.inspect(p) for p in payloads]
             return out
         header, sections = _sections_unpack(buf)
         out = dict(header, section_bytes=[len(s) for s in sections])
@@ -316,12 +401,19 @@ class Compressor:
 
         Returns backend-native arrays (device for the jax backend) — the
         host path converts, the device-engine path keeps them resident.
+
+        A Pallas lowering/runtime failure falls back to the jax engine —
+        both backends quantize with the same arithmetic, so the output is
+        identical; the fallback lands in ``last_telemetry``.
         """
         if self.spec.backend == "pallas" and ndim == 3:
-            from repro.kernels.interp3d import compress_blocks_pallas
+            try:
+                from repro.kernels.interp3d import compress_blocks_pallas
 
-            codes_b, outl_b, _ = compress_blocks_pallas(blocks, 2.0 * eb_abs, steps, stride)
-            return codes_b, outl_b
+                codes_b, outl_b, _ = compress_blocks_pallas(blocks, 2.0 * eb_abs, steps, stride)
+                return codes_b, outl_b
+            except Exception as e:
+                self._record_fallback("predictor", "pallas", "jax", e)
         codes_b, outl_b, _ = compress_blocks(jnp.asarray(blocks), jnp.float32(2.0 * eb_abs), steps, stride)
         return codes_b, outl_b
 
@@ -363,9 +455,14 @@ class Compressor:
         """
         sp = self.spec
         if pipelines._is_jax(cgrid):
-            from .reorder import reorder_codes_batch_device
+            try:
+                from .reorder import reorder_codes_batch_device
 
-            seq = reorder_codes_batch_device(cgrid, stride, sp.reorder)
+                seq = reorder_codes_batch_device(cgrid, stride, sp.reorder)
+            except Exception as e:  # device reorder failed: host twin, same bytes
+                self._record_fallback("reorder", "device", "numpy", e)
+                cgrid = np.asarray(cgrid)
+                seq = reorder_codes_batch(cgrid, stride, sp.reorder)
         else:
             seq = reorder_codes_batch(cgrid, stride, sp.reorder)
         payload, penc = self._encode_codes(seq)
@@ -406,13 +503,18 @@ class Compressor:
             # level reorder, and the encoding engine (inside _pack_interp);
             # outliers come from the code==0 <=> outlier invariant the
             # sharded path already relies on — no outlier grid crosses over
-            cgrid = blk.scatter_blocks_batch_jnp(jnp.asarray(codes_b), batch,
-                                                 padded_shapes, blk.ANCHOR_STRIDE)
-            anc = blk.anchor_grid_batch(padded, stride)
-            oi = np.asarray(jnp.flatnonzero(cgrid.reshape(-1) == 0)).astype(np.int64)
-            ov = padded.reshape(-1)[oi]
-            return self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
-                                     stride=stride, splines=splines, schemes=schemes)
+            try:
+                cgrid = blk.scatter_blocks_batch_jnp(jnp.asarray(codes_b), batch,
+                                                     padded_shapes, blk.ANCHOR_STRIDE)
+                anc = blk.anchor_grid_batch(padded, stride)
+                oi = np.asarray(jnp.flatnonzero(cgrid.reshape(-1) == 0)).astype(np.int64)
+                ov = padded.reshape(-1)[oi]
+                return self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
+                                         stride=stride, splines=splines, schemes=schemes)
+            except Exception as e:
+                # device tail failed (lowering/OOM/dead device): replay the
+                # numpy reference tail below — bit-identical container
+                self._record_fallback("pack", "device", "numpy", e)
         codes_b, outl_b = np.asarray(codes_b), np.asarray(outl_b)
         cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
         ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
@@ -440,19 +542,58 @@ class Compressor:
         return _sections_pack(header, [payload])
 
     # ------------------------------------------------------------ decompress
-    def decompress(self, buf: bytes, frames=None) -> np.ndarray:
+    def decompress(self, buf: bytes, frames=None, *, on_error: str = "raise",
+                   fill_value: float = 0.0) -> np.ndarray:
         """Decompress a v1/v2/v3 container.
 
         ``frames``: v3 containers only — an iterable of frame indices to
         decode (any order). The result is the selected chunks concatenated
         along the container's chunk axis in the order given; ``None``
         decodes every frame and reassembles the full field.
+
+        ``on_error`` — degraded-mode decode of damaged containers:
+
+        * ``"raise"`` (default): any integrity failure raises the typed
+          error (:mod:`repro.core.errors`) — the strict historical
+          behavior.
+        * ``"skip"``: v3 only — damaged chunks are omitted from the
+          reassembled field (the result is shorter along the chunk axis).
+        * ``"fill"``: damaged chunks are reconstructed as
+          ``fill_value`` blocks of the right shape, so the result keeps
+          the container's full geometry.
+
+        Either degraded mode records what happened on ``self.last_damage``
+        (``None`` when the container was fully intact): a dict with the
+        :class:`~repro.core.errors.DamageReport` under ``"report"`` and
+        the per-requested-chunk intact mask under ``"chunks_ok"``.
         """
+        if on_error not in ("raise", "skip", "fill"):
+            raise ValueError(f"on_error must be 'raise', 'skip' or 'fill', got {on_error!r}")
+        self.last_damage = None
         if frames_mod.is_v3(buf):
-            return self._decompress_v3(buf, frames)
+            return self._decompress_v3(buf, frames, on_error=on_error, fill_value=fill_value)
         if frames is not None:
             raise ValueError("frames= is only meaningful for v3 (chunked) containers")
-        header, sections = _sections_unpack(buf)
+        try:
+            header, sections = _sections_unpack(buf)
+            return self._decompress_sections(header, sections)
+        except Exception as e:
+            if on_error != "fill":
+                raise
+            # salvage a single container only when its header still tells
+            # us the field geometry; otherwise there is nothing to fill
+            try:
+                header, _ = _sections_unpack(buf)
+                shape = tuple(header["shape"])
+            except Exception:
+                raise e from None
+            report = DamageReport()
+            report.add("decode", 0, index=0, detail=repr(e))
+            report.frames_damaged = 1
+            self.last_damage = {"report": report, "chunks_ok": [False], "on_error": on_error}
+            return np.full(shape, np.float32(fill_value), np.float32)
+
+    def _decompress_sections(self, header, sections) -> np.ndarray:
         shape = tuple(header["shape"])
         mode = header["mode"]
         if mode == "const":
@@ -501,19 +642,85 @@ class Compressor:
         sl = (slice(None),) + tuple(slice(0, s) for s in spatial)
         return out[sl].reshape(shape)
 
-    def _decompress_v3(self, buf: bytes, frames=None) -> np.ndarray:
+    @staticmethod
+    def _chunk_shape(header: dict, i: int) -> tuple:
+        """Chunk ``i``'s field shape from a v3 chunk-stream header."""
+        shape = list(header["shape"])
+        axis = int(header.get("axis", 0))
+        shape[axis] = int(header["chunk_sizes"][i])
+        return tuple(shape)
+
+    def _salvage_payloads(self, buf, on_error: str):
+        """Per-frame payloads of a v3 stream, degraded-mode aware.
+
+        Returns ``(header, payloads: dict[int, bytes], report)``. Strict
+        mode raises on the first integrity failure; degraded modes fall
+        back to :func:`repro.core.frames.scan_frames` when the frame walk
+        itself is damaged (corrupt lengths, truncation), and mark
+        CRC-damaged frames absent otherwise.
+        """
+        try:
+            header, table = frames_mod.frame_table(buf)
+        except ContainerError:
+            if on_error == "raise":
+                raise
+            header = frames_mod.read_header(buf)
+            good, report = frames_mod.scan_frames(buf)
+            return header, dict(good), report
+        report = DamageReport(declared_frames=len(table))
+        payloads = {}
+        for i, t in enumerate(table):
+            try:
+                payloads[i] = frames_mod.read_frame(buf, t)
+                report.frames_ok += 1
+            except FrameCRCError:
+                if on_error == "raise":
+                    raise
+                report.add("crc", t[0], index=i, detail="payload CRC32 mismatch")
+                report.frames_damaged += 1
+        return header, payloads, report
+
+    def _decompress_v3(self, buf: bytes, frames=None, *, on_error: str = "raise",
+                       fill_value: float = 0.0) -> np.ndarray:
         """Chunked container v3: decode frames (each a v1/v2 container of one
-        chunk) independently and reassemble along the chunk axis."""
-        header, table = frames_mod.frame_table(buf)
+        chunk) independently and reassemble along the chunk axis. Under
+        ``on_error="skip"``/``"fill"`` damaged chunks cost only themselves:
+        the other chunks reassemble normally (see :meth:`decompress`)."""
+        header, payloads, report = self._salvage_payloads(buf, on_error)
         if header.get("kind") != "chunks":
             raise ValueError(
                 f"v3 container kind {header.get('kind')!r} is not a compressor chunk "
                 "stream; use its producer's reader"
             )
-        idx = list(range(len(table))) if frames is None else [int(i) for i in frames]
+        n_chunks = len(header["chunk_sizes"])
+        idx = list(range(n_chunks)) if frames is None else [int(i) for i in frames]
         if not idx:
             raise ValueError("frames= selected no frames; pass at least one index (or None for all)")
-        parts = [self.decompress(frames_mod.read_frame(buf, table[i])) for i in idx]
+        parts, mask = [], []
+        for i in idx:
+            part = None
+            if i in payloads:
+                if on_error == "raise":
+                    part = self.decompress(payloads[i])
+                else:
+                    try:
+                        part = self.decompress(payloads[i])
+                    except Exception as e:  # resync false positive / garbage past CRC
+                        report.add("decode", -1, index=i, detail=repr(e))
+                        report.frames_damaged += 1
+            elif on_error == "raise":
+                raise ContainerError(f"frame {i} missing from v3 container")
+            mask.append(part is not None)
+            if part is not None:
+                parts.append(part)
+            elif on_error == "fill":
+                parts.append(np.full(self._chunk_shape(header, i), np.float32(fill_value), np.float32))
+        if not report.ok:
+            self.last_damage = {"report": report, "chunks_ok": mask, "on_error": on_error}
+        if not parts:
+            raise ContainerError(
+                f"no decodable frames in damaged v3 container ({report.summary()})"
+            )
         axis = int(header.get("axis", 0))
         return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=axis)
 

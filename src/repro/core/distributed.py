@@ -159,14 +159,18 @@ def _gather_flat(dev_arr, oi: np.ndarray) -> np.ndarray:
 # ------------------------------------------------------------ host fallback
 def chunk_compress(x, *, axis: int = 0, n_chunks: int | None = None,
                    spec: CompressorSpec | None = None, compressor: Compressor | None = None,
-                   out=None, **kw) -> bytes | int:
+                   out=None, sync: bool = False, **kw) -> bytes | int:
     """Host-sequential v3 producer: split along ``axis``, one container
     frame per chunk (``Compressor.compress`` of the chunk, bit for bit).
 
     ``out``: optional file-like sink — frames are written (and flushed) as
     each chunk's encode completes, so a slow sink overlaps the next
     chunk's encode; returns the frame count then. Without ``out`` returns
-    the packed v3 bytes.
+    the packed v3 bytes. ``sync=True`` writes per-frame sync markers +
+    sequence numbers (O(damage) resync, exact surviving-frame indices —
+    see :mod:`repro.core.frames`); the default layout is unchanged. If the
+    encode of a chunk fails mid-stream, the writer *aborts* (no trailer),
+    so the partial stream reads as truncated instead of complete.
     """
     comp = _resolve_compressor(spec, compressor, kw)
     x = np.asarray(x)
@@ -175,19 +179,25 @@ def chunk_compress(x, *, axis: int = 0, n_chunks: int | None = None,
     bounds = np.linspace(0, n, n_chunks + 1).astype(np.int64)
     sizes = np.diff(bounds)
     sink = out if out is not None else io.BytesIO()
-    w = frames.FrameWriter(sink, _chunk_header(x.shape, axis, sizes, comp.spec))
-    sl = [slice(None)] * x.ndim
-    for lo, hi in zip(bounds[:-1], bounds[1:]):
-        sl[axis] = slice(int(lo), int(hi))
-        w.write_frame(comp.compress(x[tuple(sl)]))
-    nf = w.close()
+    hold, comp._telemetry_hold = comp._telemetry_hold, True
+    if not hold:  # a holding caller (shard fallback) keeps its records
+        comp.last_telemetry = None
+    try:
+        with frames.FrameWriter(sink, _chunk_header(x.shape, axis, sizes, comp.spec), sync=sync) as w:
+            sl = [slice(None)] * x.ndim
+            for lo, hi in zip(bounds[:-1], bounds[1:]):
+                sl[axis] = slice(int(lo), int(hi))
+                w.write_frame(comp.compress(x[tuple(sl)]))
+        nf = w.close()
+    finally:
+        comp._telemetry_hold = hold
     return nf if out is not None else sink.getvalue()
 
 
 # ------------------------------------------------------------ sharded path
 def shard_compress(x, mesh: Mesh | None = None, *, axis: int = 0,
                    spec: CompressorSpec | None = None, compressor: Compressor | None = None,
-                   out=None, **kw):
+                   out=None, sync: bool = False, **kw):
     """Device-parallel v3 producer (see module docstring).
 
     ``x``: array (numpy or jax, possibly already device-sharded) or a
@@ -196,8 +206,15 @@ def shard_compress(x, mesh: Mesh | None = None, *, axis: int = 0,
     Chunks = equal splits of ``x.shape[axis]`` across the mesh. Falls back
     to :func:`chunk_compress` (identical container format) when the axis
     doesn't split evenly, the mesh is a single device, or the spec's
-    predictor has no device path. ``out``: optional file-like sink,
-    frames stream to it as encoded (returns the frame count).
+    predictor has no device path — and, new with the resilience layer,
+    when the device passes themselves *fail* (a lowering error, a dead
+    mesh) before any frame was emitted: the host path re-runs the whole
+    field and the fallback is recorded in the compressor's
+    ``last_telemetry``, so a transient accelerator fault degrades
+    throughput instead of killing the save. ``out``: optional file-like
+    sink, frames stream to it as encoded (returns the frame count).
+    ``sync=True`` adds per-frame sync markers (see
+    :mod:`repro.core.frames`).
     """
     if not isinstance(x, (np.ndarray, jnp.ndarray)):
         if out is not None:
@@ -211,7 +228,8 @@ def shard_compress(x, mesh: Mesh | None = None, *, axis: int = 0,
                     f"shard_compress pytree leaves must be arrays with ndim >= 1, got "
                     f"{type(leaf).__name__} shaped {arr.shape}; filter scalar leaves out first"
                 )
-            return shard_compress(arr, mesh, axis=axis, spec=spec, compressor=compressor, **kw)
+            return shard_compress(arr, mesh, axis=axis, spec=spec, compressor=compressor,
+                                  sync=sync, **kw)
 
         return jax.tree.map(one, x)
     comp = _resolve_compressor(spec, compressor, kw)
@@ -223,19 +241,37 @@ def shard_compress(x, mesh: Mesh | None = None, *, axis: int = 0,
     n = int(x.shape[axis])
     if ndev == 1 or n % ndev != 0 or sp.predictor not in ("interp", "auto"):
         return chunk_compress(np.asarray(x), axis=axis, n_chunks=min(n, max(ndev, 1)),
-                              compressor=comp, out=out)
+                              compressor=comp, out=out, sync=sync)
     k = n // ndev
     chunk_shape = tuple(k if d == axis else s for d, s in enumerate(x.shape))
     header = _chunk_header(x.shape, axis, [k] * ndev, sp)
-    sink = out if out is not None else io.BytesIO()
-    w = frames.FrameWriter(sink, header)
-    # _shard_compress_frames is a generator: the device passes run up front,
-    # but each chunk's host tail (scatter/orchestrate/encode) yields its
-    # frame as soon as it is packed, so sink writeback overlaps the next
-    # chunk's encode
-    for fr in _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp):
-        w.write_frame(fr)
-    nf = w.close()
+    hold, comp._telemetry_hold = comp._telemetry_hold, True
+    if not hold:
+        comp.last_telemetry = None
+    try:
+        # _shard_compress_frames is a generator: the device passes run up
+        # front, but each chunk's host tail (scatter/orchestrate/encode)
+        # yields its frame as soon as it is packed, so sink writeback
+        # overlaps the next chunk's encode. Pulling the first frame before
+        # opening the writer keeps the engine-failure fallback clean: if
+        # the device passes die, nothing was written yet and the whole
+        # field replays through the host path (identical container).
+        gen = _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp)
+        try:
+            first = next(gen, None)
+        except Exception as e:
+            comp._record_fallback("shard", "shard_map", "chunk_compress", e)
+            return chunk_compress(np.asarray(x), axis=axis, n_chunks=ndev,
+                                  compressor=comp, out=out, sync=sync)
+        sink = out if out is not None else io.BytesIO()
+        with frames.FrameWriter(sink, header, sync=sync) as w:
+            if first is not None:
+                w.write_frame(first)
+                for fr in gen:
+                    w.write_frame(fr)
+        nf = w.close()
+    finally:
+        comp._telemetry_hold = hold
     return nf if out is not None else sink.getvalue()
 
 
@@ -383,24 +419,61 @@ def _first_value(xd, i: int, k: int, axis: int) -> float:
 
 
 # --------------------------------------------------------------- decompress
-def shard_decompress(buf, frames_sel=None, *, workers: int | None = None) -> np.ndarray:
+def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
+                     on_error: str = "raise", fill_value: float = 0.0,
+                     compressor: Compressor | None = None) -> np.ndarray:
     """Decode a v3 chunk stream; ``frames_sel`` selects a subset (any order).
 
     ``workers > 1`` decodes frames on a thread pool — frames are
     independent containers, so decode parallelism needs no coordination.
+
+    ``on_error="skip"``/``"fill"``: salvage decode of damaged streams,
+    same semantics as :meth:`Compressor.decompress` — damaged chunks are
+    dropped or filled, intact chunks decode normally. Pass your own
+    ``compressor`` to read the damage mask back from its ``last_damage``.
     """
-    comp = Compressor(CompressorSpec())
+    comp = compressor if compressor is not None else Compressor(CompressorSpec())
     if not workers or workers <= 1:
-        return comp.decompress(buf, frames=frames_sel)
-    header, table = frames.frame_table(buf)
+        return comp.decompress(buf, frames=frames_sel, on_error=on_error, fill_value=fill_value)
+    comp.last_damage = None
+    header, payloads, report = comp._salvage_payloads(buf, on_error)
     if header.get("kind") != "chunks":
         raise ValueError(f"v3 container kind {header.get('kind')!r} is not a compressor chunk stream")
-    idx = list(range(len(table))) if frames_sel is None else [int(i) for i in frames_sel]
+    n_chunks = len(header["chunk_sizes"])
+    idx = list(range(n_chunks)) if frames_sel is None else [int(i) for i in frames_sel]
     if not idx:
         raise ValueError("frames_sel selected no frames; pass at least one index (or None for all)")
     from concurrent.futures import ThreadPoolExecutor
 
+    from .errors import ContainerError
+
+    def _one(i: int):
+        p = payloads.get(i)
+        if p is None:
+            if on_error == "raise":
+                raise ContainerError(f"frame {i} missing from v3 container")
+            return None
+        try:
+            return comp.decompress(p)
+        except Exception as e:
+            if on_error == "raise":
+                raise
+            report.add("decode", -1, index=i, detail=repr(e))
+            report.frames_damaged += 1
+            return None
+
     with ThreadPoolExecutor(max_workers=workers) as ex:
-        parts = list(ex.map(lambda i: comp.decompress(frames.read_frame(buf, table[i])), idx))
+        raw = list(ex.map(_one, idx))
+    mask = [p is not None for p in raw]
+    parts = []
+    for i, p in zip(idx, raw):
+        if p is not None:
+            parts.append(p)
+        elif on_error == "fill":
+            parts.append(np.full(Compressor._chunk_shape(header, i), np.float32(fill_value), np.float32))
+    if not report.ok:
+        comp.last_damage = {"report": report, "chunks_ok": mask, "on_error": on_error}
+    if not parts:
+        raise ContainerError(f"no decodable frames in damaged v3 container ({report.summary()})")
     axis = int(header.get("axis", 0))
     return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=axis)

@@ -47,29 +47,37 @@ def _kv_roundtrip(cache, eb: float):
     leaves, treedef = jax.tree.flatten(cache)
 
     # ---- offload: one frame per float cache leaf, streamed as produced
+    # (context manager: an encode failure aborts the writer, leaving the
+    # stream honestly truncated instead of trailer-sealed-but-short)
     sink = io.BytesIO()
-    writer = FrameWriter(sink, {"kind": "kvcache", "eb": eb})
     framed: list[int] = []  # leaf indices, in frame order
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(leaf)
-        if not jnp.issubdtype(leaf.dtype, jnp.floating) or arr.size < 4096:
-            continue
-        buf = comp.compress(arr.astype(np.float32))
-        writer.write_frame(buf)
-        framed.append(i)
-        picked = Compressor.inspect(buf).get("pipeline", "?")
-        stats["raw_bytes"] += arr.size * arr.dtype.itemsize
-        stats["comp_bytes"] += len(buf)
-        stats["pipelines"][picked] = stats["pipelines"].get(picked, 0) + 1
+    with FrameWriter(sink, {"kind": "kvcache", "eb": eb}, sync=True) as writer:
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            if not jnp.issubdtype(leaf.dtype, jnp.floating) or arr.size < 4096:
+                continue
+            buf = comp.compress(arr.astype(np.float32))
+            writer.write_frame(buf)
+            framed.append(i)
+            picked = Compressor.inspect(buf).get("pipeline", "?")
+            stats["raw_bytes"] += arr.size * arr.dtype.itemsize
+            stats["comp_bytes"] += len(buf)
+            stats["pipelines"][picked] = stats["pipelines"].get(picked, 0) + 1
     stats["frames"] = writer.close()
     stats["stream_bytes"] = sink.getbuffer().nbytes
 
-    # ---- restore: stream the frames back, rebuilding leaf by leaf
+    # ---- restore: stream the frames back, rebuilding leaf by leaf; a
+    # damaged frame costs only its own layer (that leaf keeps its
+    # uncompressed value), never the rest of the cache
     sink.seek(0)
-    reader = FrameReader(sink)
-    for i, frame in zip(framed, reader):
-        out = comp.decompress(frame).reshape(leaves[i].shape)
-        leaves[i] = jnp.asarray(out, leaves[i].dtype)
+    with FrameReader(sink) as reader:
+        by_frame = dict(enumerate(framed))
+        for k, frame in reader.iter_frames(on_error="skip"):
+            i = by_frame[k]
+            out = comp.decompress(frame).reshape(leaves[i].shape)
+            leaves[i] = jnp.asarray(out, leaves[i].dtype)
+        if not reader.damage.ok:
+            stats["damage"] = reader.damage.summary()
     cache = jax.tree.unflatten(treedef, leaves)
     stats["cr"] = stats["raw_bytes"] / max(stats["comp_bytes"], 1)
     return cache, stats

@@ -135,18 +135,18 @@ def pack_quantized_sharded(q, scale, pipeline: str = "auto") -> bytes:
         seen.setdefault(key, s.data)
     order = sorted(seen)
     sink = io.BytesIO()
-    w = FrameWriter(sink, {
+    header = {
         "kind": "gradq",
         "shape": list(q.shape),
         "scale": float(scale),
         "slices": [[list(b) for b in key] for key in order],
-    })
-    for key in order:
-        # the shard stays a device array: pack_quantized re-biases it on
-        # device and the encoding engine emits the frame payload directly —
-        # the raw quantized stream never crosses to host
-        w.write_frame(pack_quantized(seen[key], scale, pipeline))
-    w.close()
+    }
+    with FrameWriter(sink, header) as w:
+        for key in order:
+            # the shard stays a device array: pack_quantized re-biases it on
+            # device and the encoding engine emits the frame payload directly —
+            # the raw quantized stream never crosses to host
+            w.write_frame(pack_quantized(seen[key], scale, pipeline))
     return sink.getvalue()
 
 

@@ -1,0 +1,11 @@
+"""repro.testing — deterministic fault injection for the chaos suite."""
+from .faults import (  # noqa: F401
+    FlakyFile,
+    bit_flip,
+    corrupt_frame,
+    drop_frame,
+    fault_rng,
+    fault_seed,
+    torn_tail,
+    truncate_fraction,
+)

@@ -1,0 +1,146 @@
+"""Deterministic fault injectors for the chaos test suite.
+
+Every injector is a pure function ``bytes -> bytes`` (or a thin wrapper
+around a file object), parameterized so a committed fixture or a seeded
+sweep reproduces the exact same damage forever. Storage faults model the
+real failure modes of the v3 container stack:
+
+* :func:`bit_flip` — a single flipped bit (media corruption);
+* :func:`truncate_fraction` — the stream cut short (crash mid-transfer);
+* :func:`torn_tail` — a torn write: the tail replaced by garbage the
+  length of a partially-landed block (power loss inside ``write()``);
+* :func:`corrupt_frame` / :func:`drop_frame` — frame-targeted damage for
+  v3 streams (flip inside payload i / splice a whole record out);
+* :class:`FlakyFile` — a file wrapper raising ``OSError`` on the Nth
+  ``write()``/``read()`` call, driving the retry/backoff paths.
+
+Seeding: :func:`fault_seed` reads ``REPRO_FAULTS`` (pinned in the CI
+chaos lane) so randomized sweeps are reproducible across runs; pass the
+result to :func:`fault_rng` / hypothesis / your own sampler.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+
+def fault_seed(default: int = 20260808) -> int:
+    """The chaos-suite seed: ``REPRO_FAULTS`` env var, or ``default``."""
+    try:
+        return int(os.environ.get("REPRO_FAULTS", default))
+    except ValueError:
+        return default
+
+
+def fault_rng(seed: int | None = None) -> np.random.Generator:
+    return np.random.default_rng(fault_seed() if seed is None else seed)
+
+
+# ---------------------------------------------------------------- storage
+def bit_flip(buf: bytes, offset: int, bit: int = 0) -> bytes:
+    """Flip one bit at byte ``offset`` (negative offsets index from the end)."""
+    b = bytearray(buf)
+    b[offset] ^= 1 << (bit & 7)
+    return bytes(b)
+
+
+def truncate_fraction(buf: bytes, fraction: float) -> bytes:
+    """Keep the first ``fraction`` of the stream (crash mid-transfer)."""
+    if not 0.0 <= fraction <= 1.0:
+        raise ValueError(f"fraction must be in [0, 1], got {fraction}")
+    return bytes(buf[: int(len(buf) * fraction)])
+
+
+def torn_tail(buf: bytes, fraction: float, *, garbage: int = 64, seed: int | None = None) -> bytes:
+    """Torn write: truncate at ``fraction`` then append ``garbage`` bytes
+    of seeded noise — the on-disk state after a write that half-landed."""
+    kept = truncate_fraction(buf, fraction)
+    noise = fault_rng(seed).integers(0, 256, size=garbage, dtype=np.uint8).tobytes()
+    return kept + noise
+
+
+# ----------------------------------------------------------- v3 targeted
+def _v3_table(buf: bytes):
+    from repro.core import frames
+
+    header, table = frames.frame_table(buf)
+    sync = bool(header.get("_sync"))
+    prefix = 24 if sync else 12  # sync: 8B marker + u32 seq + u64 size + u32 crc
+    return table, prefix
+
+
+def corrupt_frame(buf: bytes, index: int, *, offset: int = 0, bit: int = 0) -> bytes:
+    """Flip one bit inside frame ``index``'s payload of a v3 stream."""
+    table, _ = _v3_table(buf)
+    off, size, _ = table[index]
+    if not -size <= offset < size:
+        raise ValueError(f"offset {offset} outside frame {index} (size {size})")
+    return bit_flip(buf, off + (offset % size), bit)
+
+
+def drop_frame(buf: bytes, index: int) -> bytes:
+    """Splice frame ``index``'s whole record (prefix + payload) out of a
+    v3 stream, leaving the trailer count untouched — the reader sees a
+    consistent-looking stream whose declared count no longer matches."""
+    table, prefix = _v3_table(buf)
+    off, size, _ = table[index]
+    return bytes(buf[: off - prefix]) + bytes(buf[off + size :])
+
+
+# ------------------------------------------------------------------- I/O
+class FlakyFile:
+    """File-object wrapper that raises on chosen calls.
+
+    ``fail_calls``: 1-based call numbers (counted per wrapped op across
+    the object's lifetime) that raise instead of performing the op;
+    ``fail_ops``: which methods count/fail (default both ``write`` and
+    ``read``); ``exc``: exception factory. The failure happens *before*
+    the underlying call, so a retried op is safe to repeat — the
+    transient-fault model the retry layer assumes.
+
+        sink = FlakyFile(open(p, "wb"), fail_calls={2, 3})
+        sink.write(a)   # ok          (call 1)
+        sink.write(b)   # OSError     (call 2)
+        sink.write(b)   # OSError     (call 3)
+        sink.write(b)   # ok          (call 4) -> retry succeeds
+    """
+
+    def __init__(self, f, *, fail_calls=(), fail_ops=("write", "read"),
+                 exc=lambda: OSError("injected transient I/O fault")):
+        self._f = f
+        self._fail_calls = set(int(c) for c in fail_calls)
+        self._fail_ops = tuple(fail_ops)
+        self._exc = exc
+        self.calls = 0
+        self.faults = 0
+
+    def _gate(self, op: str):
+        if op in self._fail_ops:
+            self.calls += 1
+            if self.calls in self._fail_calls:
+                self.faults += 1
+                raise self._exc()
+
+    def write(self, b):
+        self._gate("write")
+        return self._f.write(b)
+
+    def read(self, *a):
+        self._gate("read")
+        return self._f.read(*a)
+
+    def flush(self):
+        self._gate("flush")
+        if hasattr(self._f, "flush"):
+            return self._f.flush()
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        if hasattr(self._f, "close"):
+            self._f.close()

@@ -11,6 +11,13 @@ round-trip asymmetry) fails loudly.
 
 Only regenerate when the container format changes *intentionally*; the
 fixtures are the compatibility contract for already-written archives.
+
+Alongside the intact containers, three *corrupt* v3 fixtures are derived
+deterministically from golden_v3.bin through :mod:`repro.testing.faults`
+— a mid-payload bit flip in frame 1, a hard truncation, and a torn tail
+(truncate + garbage) — so the salvage decoder's behaviour on damaged
+archives is pinned byte-for-byte too, not just exercised on fresh
+in-process corruption.
 """
 import pathlib
 
@@ -18,7 +25,9 @@ import numpy as np
 
 from repro.core import Compressor, CompressorSpec, chunk_compress
 from repro.core.compressor import _sections_pack_v1, _sections_unpack
+from repro.core.frames import frame_table
 from repro.core.lossless import pipelines as pp
+from repro.testing import bit_flip, torn_tail, truncate_fraction
 
 HERE = pathlib.Path(__file__).parent
 SPEC = CompressorSpec(eb=1e-2, pipeline="cr", autotune=False)
@@ -54,6 +63,14 @@ def main():
     (HERE / "golden_v1.bin").write_bytes(v1)
     (HERE / "golden_v2.bin").write_bytes(v2)
     (HERE / "golden_v3.bin").write_bytes(v3)
+    # corrupt derivatives: deterministic damage, pinned salvage behaviour
+    _, table = frame_table(v3)
+    off1, size1, _ = table[1]
+    (HERE / "golden_v3_bitflip.bin").write_bytes(bit_flip(v3, off1 + size1 // 2, bit=3))
+    # cut inside frame 2's payload: frames 0-1 stay intact
+    (HERE / "golden_v3_trunc.bin").write_bytes(truncate_fraction(v3, (table[2][0] + 16) / len(v3)))
+    (HERE / "golden_v3_torn.bin").write_bytes(
+        torn_tail(v3, (table[3][0] + 8) / len(v3), garbage=96, seed=20260808))
     for f in sorted(HERE.glob("golden_*")):
         print(f.name, f.stat().st_size, "bytes")
 

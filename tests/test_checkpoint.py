@@ -72,3 +72,188 @@ def test_async_checkpointer(tmp_path):
     assert ckpt.latest_step(tmp_path) in (1, 2, 3)  # at least one published
     out, _ = ckpt.restore(tree, tmp_path)
     assert np.array_equal(out["w"], tree["w"])
+
+
+# ----------------------------------------------------- fault tolerance
+
+
+def test_manifest_records_per_leaf_crc32(tmp_path):
+    import zlib
+
+    tree = _tree()
+    manifest = ckpt.save(tree, tmp_path, 1, eb=1e-3)
+    assert manifest["format"] == 2
+    d = pathlib.Path(tmp_path) / "step_00000001"
+    for key, meta in manifest["leaves"].items():
+        payload = (d / meta["file"]).read_bytes()
+        assert meta["crc32"] == (zlib.crc32(payload) & 0xFFFFFFFF), key
+
+
+def _flip(path: pathlib.Path, offset: int = None, bit: int = 6):
+    b = bytearray(path.read_bytes())
+    i = len(b) // 2 if offset is None else offset
+    b[i] ^= 1 << bit
+    path.write_bytes(bytes(b))
+
+
+def test_strict_restore_raises_on_corrupt_leaf(tmp_path):
+    from repro.core import CheckpointDamageError
+
+    tree = _tree()
+    m = ckpt.save(tree, tmp_path, 1, eb=1e-3)
+    _flip(pathlib.Path(tmp_path) / "step_00000001" / m["leaves"]["w"]["file"])
+    with pytest.raises(CheckpointDamageError):
+        ckpt.restore(tree, tmp_path, 1)
+
+
+def test_degraded_restore_falls_back_to_previous_step(tmp_path):
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 1, eb=1e-3)
+    m2 = ckpt.save(tree, tmp_path, 2, eb=1e-3)
+    _flip(pathlib.Path(tmp_path) / "step_00000002" / m2["leaves"]["w"]["file"])
+    out, manifest = ckpt.restore(tree, tmp_path, 2, strict=False)
+    sal = manifest["salvage"]
+    assert list(sal["damaged"]) == ["w"] and sal["fallback_steps"]["w"] == 1 and not sal["lost"]
+    ref, _ = ckpt.restore(tree, tmp_path, 1)  # fallback leaf == step-1 decode
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(ref["w"]))
+    # undamaged leaves still come from step 2
+    assert np.array_equal(np.asarray(out["b"]), np.asarray(tree["b"]))
+
+
+def test_degraded_restore_lost_leaf_zero_filled(tmp_path):
+    tree = _tree()
+    m = ckpt.save(tree, tmp_path, 1, eb=1e-3)  # only step: nothing to fall back to
+    _flip(pathlib.Path(tmp_path) / "step_00000001" / m["leaves"]["w"]["file"])
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype), tree)
+    out, manifest = ckpt.restore(shapes, tmp_path, 1, strict=False)
+    assert manifest["salvage"]["lost"] == ["w"]
+    assert not np.asarray(out["w"]).any() and np.asarray(out["w"]).shape == tree["w"].shape
+
+
+def test_degraded_restore_survives_missing_manifest(tmp_path):
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 1)
+    ckpt.save(tree, tmp_path, 2)
+    (pathlib.Path(tmp_path) / "step_00000002" / "manifest.json").unlink()
+    out, manifest = ckpt.restore(tree, tmp_path, 2, strict=False)
+    assert manifest["step"] == 1
+    assert manifest["salvage"]["fallback_steps"]["<manifest>"] == 1
+    assert np.array_equal(np.asarray(out["w"]), tree["w"])
+
+
+def test_format1_checkpoints_still_restore(tmp_path):
+    """Manifests without per-leaf crc32 (format 1) restore unchanged."""
+    import json
+
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 1)
+    mp = pathlib.Path(tmp_path) / "step_00000001" / "manifest.json"
+    manifest = json.loads(mp.read_text())
+    manifest["format"] = 1
+    for meta in manifest["leaves"].values():
+        meta.pop("crc32", None)
+    mp.write_text(json.dumps(manifest))
+    out, _ = ckpt.restore(tree, tmp_path, 1)
+    assert np.array_equal(np.asarray(out["w"]), tree["w"])
+
+
+def test_stale_tmp_dirs_swept_on_next_save(tmp_path):
+    tree = _tree()
+    stale = pathlib.Path(tmp_path) / ".tmp_step_00000007_deadbeef"
+    stale.mkdir(parents=True)
+    (stale / "w.bin").write_bytes(b"orphaned by a killed process")
+    ckpt.save(tree, tmp_path, 8)
+    assert not stale.exists()
+    assert ckpt.latest_step(tmp_path) == 8
+
+
+def test_failed_save_does_not_leak_tmp_dir(tmp_path, monkeypatch):
+    from repro.checkpoint import manager
+
+    tree = _tree()
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(manager, "encode_tensor_to", boom)
+    with pytest.raises(OSError):
+        ckpt.save(tree, tmp_path, 1)
+    assert not list(pathlib.Path(tmp_path).glob(".tmp_step_*"))
+
+
+def test_async_submit_is_race_safe(tmp_path):
+    import threading
+
+    saver = ckpt.AsyncCheckpointer(tmp_path)
+    tree = _tree()
+    errs = []
+
+    def hammer(base):
+        try:
+            for i in range(25):
+                saver.submit(tree, base + i)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(100 * (k + 1),)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    saver.wait()
+    saver.close()
+    assert not errs and ckpt.latest_step(tmp_path) is not None
+
+
+def test_async_close_idempotent_and_rejects_late_submit(tmp_path):
+    saver = ckpt.AsyncCheckpointer(tmp_path)
+    saver.submit(_tree(), 1)
+    saver.close()
+    saver.close()  # no-op, no deadlock
+    with pytest.raises(RuntimeError):
+        saver.submit(_tree(), 2)
+
+
+def test_async_close_surfaces_join_timeout(tmp_path, monkeypatch):
+    import threading
+    import time
+
+    from repro.checkpoint import manager
+
+    release = threading.Event()
+    real_save = manager.save
+
+    def slow_save(*a, **kw):
+        release.wait(10)
+        return real_save(*a, **kw)
+
+    monkeypatch.setattr(manager, "save", slow_save)
+    saver = ckpt.AsyncCheckpointer(tmp_path)
+    try:
+        saver.submit(_tree(), 1)
+        time.sleep(0.05)  # let the worker enter the slow save
+        with pytest.raises(TimeoutError):
+            saver.close(timeout=0.2)
+    finally:
+        release.set()
+        saver._thread.join(15)
+
+
+def test_async_save_retries_transient_oserror(tmp_path, monkeypatch):
+    from repro.checkpoint import manager
+
+    real_save = manager.save
+    attempts = {"n": 0}
+
+    def flaky_save(*a, **kw):
+        attempts["n"] += 1
+        if attempts["n"] == 1:
+            raise OSError("NFS blip")
+        return real_save(*a, **kw)
+
+    monkeypatch.setattr(manager, "save", flaky_save)
+    saver = ckpt.AsyncCheckpointer(tmp_path)
+    saver.submit(_tree(), 1)
+    saver.wait()  # no exception: the retry absorbed the fault
+    saver.close()
+    assert attempts["n"] == 2 and ckpt.latest_step(tmp_path) == 1
