@@ -7,7 +7,10 @@ Measures each lossless stage on a 4 MiB quantization-code-like stream (the
 codec's actual workload: Laplacian codes centered on 128) across the
 ``engine`` dimension (``--engines``: ``numpy`` = the reference host
 stages, ``device`` = the jit/Pallas encoding engine of
-repro.core.lossless.engine, verified byte-identical before timing),
+repro.core.lossless.engine, verified byte-identical before timing) — in
+*both* directions: every stage/pipeline/end-to-end row carries decode
+columns (``dec_mbps``, and ``dec_dev_mbps`` where a decode twin exists),
+with byte-identity between the decode paths asserted before any timing,
 sweeps *every registered pipeline* plus the orchestrated ``auto`` mode
 over a synthetic byte-stream suite (each row carries a ``pipeline``
 dimension with CR + MB/s), sweeps the fixed-steps predictor
@@ -97,11 +100,14 @@ def bench_stage(name, enc, dec, data, reps) -> dict:
     }
 
 
-def bench_stage_device(name, enc_dev, dec, data, reps, enc_ref=None) -> dict:
+def bench_stage_device(name, enc_dev, dec, data, reps, enc_ref=None, dec_dev=None) -> dict:
     """Engine-dimension twin of bench_stage: the jit/Pallas encode path of
     repro.core.lossless.engine on a device-resident stream. The payload is
     verified byte-identical to the numpy encoder's (the engine contract)
-    before timing; decode stays on the reference path."""
+    before timing. ``dec_dev`` times the stage's device decode twin from
+    host payload bytes (H2D upload included), verified byte-identical to
+    the stream before timing; without one, decode stays on the reference
+    path."""
     import jax
     import jax.numpy as jnp
 
@@ -111,10 +117,16 @@ def bench_stage_device(name, enc_dev, dec, data, reps, enc_ref=None) -> dict:
     if enc_ref is not None:  # the contract itself, at bench size
         ref_payload, ref_hdr = enc_ref(data)
         assert pb == ref_payload and hdr == ref_hdr, f"{name}: device != numpy bytes"
-    out = dec(pb, hdr)
-    assert np.array_equal(np.asarray(out).view(np.uint8).reshape(-1), data), name
+    if dec_dev is not None:
+        out = dec_dev(pb, hdr)  # warms the decode jit caches
+        assert np.array_equal(np.asarray(out).reshape(-1), data), f"{name}: device decode != stream"
+        td_fn = lambda: jax.block_until_ready(dec_dev(pb, hdr))  # noqa: E731
+    else:
+        out = dec(pb, hdr)
+        assert np.array_equal(np.asarray(out).view(np.uint8).reshape(-1), data), name
+        td_fn = lambda: dec(pb, hdr)  # noqa: E731
     te = _best(lambda: jax.block_until_ready(enc_dev(d)[0]), reps)
-    td = _best(lambda: dec(pb, hdr), reps)
+    td = _best(td_fn, reps)
     return {
         "stage": name,
         "engine": "device",
@@ -175,8 +187,12 @@ def sweep_predictors(x: np.ndarray, stream: str, reps: int, eb: float = 1e-3) ->
     return rows
 
 
-def sweep_pipelines(data: np.ndarray, stream: str, reps: int) -> list[dict]:
-    """All registered pipelines + auto on one stream; pipeline dimension rows."""
+def sweep_pipelines(data: np.ndarray, stream: str, reps: int,
+                    device: bool = False) -> list[dict]:
+    """All registered pipelines + auto on one stream; pipeline dimension rows.
+    ``device=True`` adds an ``engine="device"`` row per pipeline: the same
+    stream decoded through the stages' decode twins (byte-identity verified
+    against the source stream before timing, result on device)."""
     rows = []
     for pipe in sorted(pp.PIPELINES):
         buf = pp.encode(data, pipe)
@@ -193,6 +209,28 @@ def sweep_pipelines(data: np.ndarray, stream: str, reps: int) -> list[dict]:
                 "cr": data.size / len(buf),
             }
         )
+        if device:
+            import jax
+            import jax.numpy as jnp
+
+            dev = jnp.asarray(data)
+            dbuf = pp.encode(dev, pipe)  # warms encode jit caches
+            assert dbuf == buf, f"{pipe}: device != numpy stream bytes"
+            out = pp.decode(buf, device=True)  # warms decode jit caches
+            assert np.array_equal(np.asarray(out), data), f"{pipe}: device decode != stream"
+            tde = _best(lambda: pp.encode(dev, pipe), reps)
+            tdd = _best(lambda: jax.block_until_ready(pp.decode(buf, device=True)), reps)
+            rows.append(
+                {
+                    "stage": f"pipeline:{pipe}",
+                    "pipeline": pipe,
+                    "engine": "device",
+                    "stream": stream,
+                    "enc_mbps": data.size / tde / 1e6,
+                    "dec_mbps": data.size / tdd / 1e6,
+                    "cr": data.size / len(buf),
+                }
+            )
     buf, record = orc.encode_auto(data)
     assert np.array_equal(pp.decode(buf), data)
     te = _best(lambda: orc.encode_auto(data), reps)
@@ -266,18 +304,18 @@ def run(reps: int = 5, smoke: bool = False, devices: int = 1,
 
         rows += [
             bench_stage_device("hf", eng.hf_encode_device, hf.decode, data, reps,
-                               enc_ref=hf.encode),
+                               enc_ref=hf.encode, dec_dev=eng.hf_decode_device),
             bench_stage_device("rre4", lambda d: eng.rre_encode_device(d, 4), rre.rre_decode, data, reps,
-                               enc_ref=lambda d: rre.rre_encode(d, 4)),
+                               enc_ref=lambda d: rre.rre_encode(d, 4), dec_dev=eng.rre_decode_device),
             bench_stage_device("rze1", lambda d: eng.rze_encode_device(d, 1), rre.rze_decode, data, reps,
-                               enc_ref=lambda d: rre.rze_encode(d, 1)),
+                               enc_ref=lambda d: rre.rze_encode(d, 1), dec_dev=eng.rze_decode_device),
             bench_stage_device("tcms8", lambda d: eng.tcms_encode_device(d, 8), tcms.tcms_decode, data, reps,
-                               enc_ref=lambda d: tcms.tcms_encode(d, 8)),
+                               enc_ref=lambda d: tcms.tcms_encode(d, 8), dec_dev=eng.tcms_decode_device),
             bench_stage_device("bit1", eng.bit1_encode_device, bs.bitshuffle_decode, data, reps,
-                               enc_ref=bs.bitshuffle_encode),
+                               enc_ref=bs.bitshuffle_encode, dec_dev=eng.bit1_decode_device),
         ]
     for stream, sdata in synthetic_streams(stream_bytes).items():
-        rows.extend(sweep_pipelines(sdata, stream, reps))
+        rows.extend(sweep_pipelines(sdata, stream, reps, device="device" in engines))
     for stream, field in synthetic_fields(pred_side).items():
         rows.extend(sweep_predictors(field, stream, reps))
     if devices > 1:
@@ -301,6 +339,25 @@ def run(reps: int = 5, smoke: bool = False, devices: int = 1,
             "cr": compression_ratio(x, buf),
         }
     )
+    if "device" in engines:
+        # end-to-end decompress-onto-device: decode twins + device
+        # reconstruct, result left on device (bit-identity verified)
+        import jax
+
+        yd = comp.decompress(buf, out="device")  # warms jit caches
+        assert comp.last_telemetry["fallbacks"] == [], comp.last_telemetry
+        assert np.array_equal(np.asarray(yd), y), "device decompress != numpy"
+        tdd = _best(lambda: jax.block_until_ready(comp.decompress(buf, out="device")), reps)
+        rows.append(
+            {
+                "stage": f"cusz_hi_cr:{field_side}^3",
+                "engine": "device",
+                "enc_mbps": x.nbytes / tc / 1e6,
+                "dec_mbps": x.nbytes / tdd / 1e6,
+                "decompress_seconds": tdd,
+                "cr": compression_ratio(x, buf),
+            }
+        )
     return {
         "bench": "lossless_hot_path",
         "smoke": bool(smoke),

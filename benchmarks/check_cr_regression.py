@@ -32,14 +32,15 @@ def cell_key(row: dict) -> tuple | None:
     """(kind, stream, name) for rows carrying a sweep dimension + CR."""
     if "cr" not in row:
         return None
+    if "engine" in row:  # engine dimension (numpy vs device): checked FIRST,
+        # so device rows of the pipeline sweep key distinctly from their
+        # numpy twins. Each engine value is its own kind: narrowing
+        # --engines drops a whole kind (tolerated as a grid difference)
+        # instead of leaving per-cell "missing" failures
+        return (f"engine/{row['engine']}", row.get("stream", "-"), row["stage"])
     for dim in ("pipeline", "predictor"):
         if dim in row:
             return (dim, row.get("stream", "-"), row[dim])
-    if "engine" in row:  # stage benches: engine dimension (numpy vs device)
-        # each engine value is its own kind, so narrowing --engines drops a
-        # whole kind (tolerated as a grid difference) instead of leaving
-        # per-cell "missing" failures
-        return (f"engine/{row['engine']}", row.get("stream", "-"), row["stage"])
     return None
 
 

@@ -157,13 +157,20 @@ def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
     return bio.getvalue(), meta
 
 
-def decode_tensor(payload: bytes, meta: dict) -> np.ndarray:
+def decode_tensor(payload: bytes, meta: dict, *, device: bool = False) -> np.ndarray:
+    """Inverse of :func:`encode_tensor`. ``device=True`` restores
+    error-bounded tensors straight to a device array (the v3 frames decode
+    through the engine's device twins, bit-identical to the host path);
+    losslessly-stored tensors decode on host either way."""
     shape = tuple(meta["shape"])
     dtype = np.dtype(meta["dtype"])
     if meta["mode"] in ("cuszhi", "cuszhi3"):  # v3 frames decode through the same path
         pipeline = meta.get("pipeline", _LEGACY_EB_PIPELINE)
         comp = Compressor(CompressorSpec(eb=meta["eb"], pipeline=pipeline, autotune=False))
-        field = comp.decompress(payload)
+        # f64 tensors restore on host: jax's default x64-disabled mode
+        # cannot hold the target dtype
+        use_dev = device and dtype != np.float64
+        field = comp.decompress(payload, out="device" if use_dev else "numpy")
         return field.reshape(-1)[: int(np.prod(shape))].reshape(shape).astype(dtype)
     if meta["mode"] == "zlib":
         raw = zlib.decompress(payload)

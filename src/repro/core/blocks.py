@@ -136,6 +136,66 @@ def scatter_blocks_batch_jnp(blocks, batch: int, shape_padded: tuple[int, ...], 
     return jnp.take(flat, idx, axis=1).reshape((batch,) + tuple(shape_padded))
 
 
+def gather_blocks_batch_jnp(xpb, stride: int = ANCHOR_STRIDE):
+    """Device twin of gather_blocks_batch: (batch, *padded) -> (batch*nb, B..).
+
+    Pure data movement with static indices — bit-identical to the numpy
+    sliding-window gather, traceable inside shard_map.
+    """
+    import jax.numpy as jnp
+
+    B = stride + 1
+    ndim = xpb.ndim - 1
+    out = xpb
+    nbs = []
+    for d in range(ndim):
+        ax = 1 + d
+        nbd = (out.shape[ax] - 1) // stride
+        nbs.append(nbd)
+        idx = (np.arange(nbd)[:, None] * stride + np.arange(B)[None, :]).reshape(-1)
+        out = jnp.take(out, jnp.asarray(idx), axis=ax)
+    shp = [out.shape[0]]
+    for nbd in nbs:
+        shp += [nbd, B]
+    out = out.reshape(shp)
+    perm = [0] + [1 + 2 * d for d in range(ndim)] + [2 + 2 * d for d in range(ndim)]
+    out = jnp.transpose(out, perm)
+    return out.reshape((xpb.shape[0] * int(np.prod(nbs)),) + (B,) * ndim)
+
+
+@functools.lru_cache(maxsize=16)
+def _anchor_index(shape_padded: tuple[int, ...], stride: int = ANCHOR_STRIDE):
+    """Cached device (idx, mask) realizing place_anchors as a gather.
+
+    ``mask[p]`` marks padded positions whose every coordinate is divisible
+    by the stride; ``idx[p]`` is the flat anchor-grid index feeding it
+    (0 where masked off). Gather+where instead of a strided scatter — the
+    fast direction on XLA:CPU (same trade as _scatter_index).
+    """
+    import jax.numpy as jnp
+
+    coords = np.meshgrid(*(np.arange(d) for d in shape_padded), indexing="ij")
+    mask = np.ones(shape_padded, bool)
+    for c in coords:
+        mask &= c % stride == 0
+    ashape = tuple((d - 1) // stride + 1 for d in shape_padded)
+    idx = np.ravel_multi_index(tuple(c // stride for c in coords), ashape).astype(np.int32)
+    idx[~mask] = 0
+    return jnp.asarray(idx.reshape(-1)), jnp.asarray(mask.reshape(-1))
+
+
+def place_anchors_batch_jnp(shape_padded: tuple[int, ...], anchors, stride: int = ANCHOR_STRIDE):
+    """Device twin of place_anchors_batch; ``anchors`` is a jax array
+    (batch, *anchor_shape); returns (batch, *padded) f32, bit-identical."""
+    import jax.numpy as jnp
+
+    idx, mask = _anchor_index(tuple(int(s) for s in shape_padded), stride)
+    flat = anchors.astype(jnp.float32).reshape(anchors.shape[0], -1)
+    rows = jnp.take(flat, idx, axis=1)
+    out = jnp.where(mask[None, :], rows, jnp.float32(0.0))
+    return out.reshape((anchors.shape[0],) + tuple(shape_padded))
+
+
 def anchor_grid(xp: np.ndarray, stride: int = ANCHOR_STRIDE) -> np.ndarray:
     """Losslessly stored anchors: every coordinate divisible by the stride."""
     sl = tuple(slice(None, None, stride) for _ in range(xp.ndim))

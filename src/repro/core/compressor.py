@@ -66,6 +66,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -78,7 +79,7 @@ from .autotune import DEFAULT_STRIDES, autotune, autotune_plan, levels_for_strid
 from .lossless import orchestrate, pipelines
 from .lossless.flenc import fl_decode, fl_encode
 from .predictor import compress_blocks, decompress_blocks
-from .reorder import reorder_codes_batch, restore_codes_batch
+from .reorder import reorder_codes_batch, restore_codes_batch, restore_codes_batch_device
 from .serial import pack_obj, unpack_obj
 from .stencils import SPLINES, build_steps
 
@@ -193,7 +194,7 @@ def _sections_unpack(buf: bytes):
         off = len(MAGIC_V1)
         hlen = int.from_bytes(buf[off : off + 8], "little")
         off += 8
-        header = json.loads(buf[off : off + hlen])
+        header = json.loads(bytes(buf[off : off + hlen]))
         off += hlen
         sections = []
         for sz in header["_sizes"]:
@@ -211,11 +212,13 @@ class Compressor:
         # the container header records everything decode needs).
         self.last_plan = None
         # Per-call observability of the fault-tolerance layer:
-        #   last_telemetry — reset by compress(); records the requested
-        #     backend/engine plus every fallback the ladder took
-        #     (pallas predictor -> jax, device encode/reorder/pack ->
-        #     numpy). The bit-identity contract makes fallbacks invisible
-        #     in the output bytes, so this dict is how degradation stays
+        #   last_telemetry — reset by compress() and decompress(); records
+        #     the requested backend/engine plus every fallback the ladder
+        #     took (pallas predictor -> jax, device encode/reorder/pack/
+        #     decode -> numpy). decompress() additionally records a
+        #     "decode" dict (engine, out, seconds, bytes, mbps). The
+        #     bit-identity contract makes fallbacks invisible in the
+        #     output bytes, so this dict is how degradation stays
         #     observable.
         #   last_damage — reset by decompress(); under on_error="skip"/
         #     "fill" records the DamageReport and the per-chunk intact
@@ -543,13 +546,24 @@ class Compressor:
 
     # ------------------------------------------------------------ decompress
     def decompress(self, buf: bytes, frames=None, *, on_error: str = "raise",
-                   fill_value: float = 0.0) -> np.ndarray:
+                   fill_value: float = 0.0, out: str = "numpy") -> np.ndarray:
         """Decompress a v1/v2/v3 container.
 
         ``frames``: v3 containers only — an iterable of frame indices to
         decode (any order). The result is the selected chunks concatenated
         along the container's chunk axis in the order given; ``None``
         decodes every frame and reassembles the full field.
+
+        ``out``: ``"numpy"`` (default) returns a host ndarray; ``"device"``
+        returns a device-resident ``jax.Array`` — with ``engine="device"``
+        (or ``"auto"``, which follows ``out``) the code stream decodes
+        through the stages' device twins and stays on device through
+        restore/anchor-placement/reconstruction, so the field never
+        bounces through host memory. Bytes-for-bytes the result matches
+        the numpy path (the engine bit-identity contract); a device decode
+        failure falls back to the numpy path and is recorded on
+        ``last_telemetry["fallbacks"]``. Each call also records
+        ``last_telemetry["decode"]`` (engine, out, seconds, bytes, MB/s).
 
         ``on_error`` — degraded-mode decode of damaged containers:
 
@@ -569,56 +583,76 @@ class Compressor:
         """
         if on_error not in ("raise", "skip", "fill"):
             raise ValueError(f"on_error must be 'raise', 'skip' or 'fill', got {on_error!r}")
+        if out not in ("numpy", "device"):
+            raise ValueError(f"out must be 'numpy' or 'device', got {out!r}")
+        hold = self._telemetry_hold
+        if not hold:
+            self.last_telemetry = None
+        tel = self._telemetry()
+        want_dev = self.spec.engine == "device" or (self.spec.engine == "auto" and out == "device")
+        t0 = time.perf_counter()
         self.last_damage = None
         if frames_mod.is_v3(buf):
-            return self._decompress_v3(buf, frames, on_error=on_error, fill_value=fill_value)
-        if frames is not None:
-            raise ValueError("frames= is only meaningful for v3 (chunked) containers")
-        try:
-            header, sections = _sections_unpack(buf)
-            return self._decompress_sections(header, sections)
-        except Exception as e:
-            if on_error != "fill":
-                raise
-            # salvage a single container only when its header still tells
-            # us the field geometry; otherwise there is nothing to fill
+            result = self._decompress_v3(buf, frames, on_error=on_error,
+                                         fill_value=fill_value, out=out)
+        else:
+            if frames is not None:
+                raise ValueError("frames= is only meaningful for v3 (chunked) containers")
             try:
-                header, _ = _sections_unpack(buf)
-                shape = tuple(header["shape"])
-            except Exception:
-                raise e from None
-            report = DamageReport()
-            report.add("decode", 0, index=0, detail=repr(e))
-            report.frames_damaged = 1
-            self.last_damage = {"report": report, "chunks_ok": [False], "on_error": on_error}
-            return np.full(shape, np.float32(fill_value), np.float32)
+                header, sections = _sections_unpack(buf)
+                result = self._decompress_sections(header, sections, device=want_dev)
+            except Exception as e:
+                if on_error != "fill":
+                    raise
+                # salvage a single container only when its header still tells
+                # us the field geometry; otherwise there is nothing to fill
+                try:
+                    header, _ = _sections_unpack(buf)
+                    shape = tuple(header["shape"])
+                except Exception:
+                    raise e from None
+                report = DamageReport()
+                report.add("decode", 0, index=0, detail=repr(e))
+                report.frames_damaged = 1
+                self.last_damage = {"report": report, "chunks_ok": [False], "on_error": on_error}
+                result = np.full(shape, np.float32(fill_value), np.float32)
+        if out == "device" and isinstance(result, np.ndarray):
+            result = jnp.asarray(result)
+        elif out == "numpy" and not isinstance(result, np.ndarray):
+            result = np.asarray(result)
+        if not hold:
+            if not isinstance(result, np.ndarray):
+                result.block_until_ready()  # honest timing for device results
+            dt = time.perf_counter() - t0
+            tel["decode"] = {
+                "engine": "device" if want_dev else "numpy", "out": out,
+                "seconds": dt, "bytes": int(result.nbytes),
+                "mbps": (result.nbytes / dt / 1e6) if dt > 0 else 0.0,
+            }
+        return result
 
-    def _decompress_sections(self, header, sections) -> np.ndarray:
+    def _decompress_sections(self, header, sections, device: bool = False) -> np.ndarray:
         shape = tuple(header["shape"])
         mode = header["mode"]
         if mode == "const":
             v = np.frombuffer(sections[0], np.float32)[0]
             return np.full(shape, v, np.float32)
         if mode == "interp":
-            return self._decompress_interp(header, sections, shape)
+            return self._decompress_interp(header, sections, shape, device=device)
         if mode == "lorenzo":
-            return self._decompress_lorenzo(header, sections, shape)
+            return self._decompress_lorenzo(header, sections, shape, device=device)
         if mode == "offset1d":
             codes = fl_decode(sections[0], header["fl"])
-            out = np.asarray(lor.offset1d_decode(jnp.asarray(codes), jnp.float32(2.0 * header["eb_abs"])))
-            return out.reshape(shape)
+            out = lor.offset1d_decode(jnp.asarray(codes), jnp.float32(2.0 * header["eb_abs"]))
+            return out.reshape(shape) if device else np.asarray(out).reshape(shape)
         raise ValueError(mode)
 
-    def _decompress_interp(self, header, sections, shape) -> np.ndarray:
+    def _decompress_interp(self, header, sections, shape, device: bool = False) -> np.ndarray:
         stride = header["anchor_stride"]
         padded_shapes = tuple(header["padded"])
         batch = header["batch"]
         ndim = len(padded_shapes)
         eb_abs = header["eb_abs"]
-        seq = pipelines.decode(sections[0])
-        anc = np.frombuffer(sections[1], np.float32)
-        oi = np.frombuffer(sections[2], np.int64)
-        ov = np.frombuffer(sections[3], np.float32)
         psize = int(np.prod(padded_shapes))
         anc_shape = tuple((d - 1) // stride + 1 for d in padded_shapes)
         levels = levels_for_stride(stride)
@@ -627,6 +661,34 @@ class Compressor:
         splines = tuple(header.get("splines", ("cubic",) * len(levels)))
         schemes = tuple(header.get("schemes", ("md",) * len(levels)))
         steps = build_steps(ndim, blk.BLOCK, levels, splines, schemes)
+        spatial = shape[len(shape) - ndim :] if len(shape) >= ndim else shape
+        sl = (slice(None),) + tuple(slice(0, s) for s in spatial)
+        anc = np.frombuffer(sections[1], np.float32)
+        oi = np.frombuffer(sections[2], np.int64)
+        ov = np.frombuffer(sections[3], np.float32)
+        if device:
+            # device-resident tail: codes decode through the stage twins and
+            # every hop to the reconstructed field is a jnp gather — same
+            # bytes as the numpy path below (bit-identity contract)
+            try:
+                seq = pipelines.decode(sections[0], device=True)
+                cgrid = restore_codes_batch_device(seq, batch, padded_shapes, fill=128,
+                                                   stride=stride, reorder=header.get("reorder", True))
+                agrid = blk.place_anchors_batch_jnp(
+                    padded_shapes, jnp.asarray(anc).reshape((batch,) + anc_shape), stride)
+                ovflat = jnp.zeros(batch * psize, jnp.float32)
+                if oi.size:  # outlier indices are batch-global and unique
+                    ovflat = ovflat.at[jnp.asarray(oi)].set(jnp.asarray(ov))
+                ovgrid = ovflat.reshape((batch,) + padded_shapes)
+                cb = blk.gather_blocks_batch_jnp(cgrid, blk.ANCHOR_STRIDE)
+                ab = blk.gather_blocks_batch_jnp(agrid, blk.ANCHOR_STRIDE)
+                vb = blk.gather_blocks_batch_jnp(ovgrid, blk.ANCHOR_STRIDE)
+                recon_b = decompress_blocks(cb, ab, vb, jnp.float32(2.0 * eb_abs), steps, stride)
+                out = blk.scatter_blocks_batch_jnp(recon_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+                return out[sl].reshape(shape)
+            except Exception as e:
+                self._record_fallback("decode", "device", "numpy", e)
+        seq = pipelines.decode(sections[0])
         cgrid = restore_codes_batch(seq, batch, padded_shapes, fill=128, dtype=np.uint8,
                                     stride=stride, reorder=header.get("reorder", True))
         agrid = blk.place_anchors_batch(padded_shapes, anc.reshape((batch,) + anc_shape), stride)
@@ -638,8 +700,6 @@ class Compressor:
         vb = blk.gather_blocks_batch(ovgrid, blk.ANCHOR_STRIDE)
         recon_b = np.asarray(decompress_blocks(jnp.asarray(cb), jnp.asarray(ab), jnp.asarray(vb), jnp.float32(2.0 * eb_abs), steps, stride))
         out = blk.scatter_blocks_batch(recon_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
-        spatial = shape[len(shape) - ndim :] if len(shape) >= ndim else shape
-        sl = (slice(None),) + tuple(slice(0, s) for s in spatial)
         return out[sl].reshape(shape)
 
     @staticmethod
@@ -681,11 +741,14 @@ class Compressor:
         return header, payloads, report
 
     def _decompress_v3(self, buf: bytes, frames=None, *, on_error: str = "raise",
-                       fill_value: float = 0.0) -> np.ndarray:
+                       fill_value: float = 0.0, out: str = "numpy") -> np.ndarray:
         """Chunked container v3: decode frames (each a v1/v2 container of one
         chunk) independently and reassemble along the chunk axis. Under
         ``on_error="skip"``/``"fill"`` damaged chunks cost only themselves:
-        the other chunks reassemble normally (see :meth:`decompress`)."""
+        the other chunks reassemble normally (see :meth:`decompress`).
+        ``out="device"`` decodes each frame onto device and concatenates
+        there — chunks land in per-shard device buffers without a host
+        bounce."""
         header, payloads, report = self._salvage_payloads(buf, on_error)
         if header.get("kind") != "chunks":
             raise ValueError(
@@ -697,24 +760,30 @@ class Compressor:
         if not idx:
             raise ValueError("frames= selected no frames; pass at least one index (or None for all)")
         parts, mask = [], []
-        for i in idx:
-            part = None
-            if i in payloads:
-                if on_error == "raise":
-                    part = self.decompress(payloads[i])
-                else:
-                    try:
-                        part = self.decompress(payloads[i])
-                    except Exception as e:  # resync false positive / garbage past CRC
-                        report.add("decode", -1, index=i, detail=repr(e))
-                        report.frames_damaged += 1
-            elif on_error == "raise":
-                raise ContainerError(f"frame {i} missing from v3 container")
-            mask.append(part is not None)
-            if part is not None:
-                parts.append(part)
-            elif on_error == "fill":
-                parts.append(np.full(self._chunk_shape(header, i), np.float32(fill_value), np.float32))
+        # per-frame decompress() calls share this call's telemetry dict
+        # (fallbacks accumulate) instead of resetting it frame by frame
+        hold, self._telemetry_hold = self._telemetry_hold, True
+        try:
+            for i in idx:
+                part = None
+                if i in payloads:
+                    if on_error == "raise":
+                        part = self.decompress(payloads[i], out=out)
+                    else:
+                        try:
+                            part = self.decompress(payloads[i], out=out)
+                        except Exception as e:  # resync false positive / garbage past CRC
+                            report.add("decode", -1, index=i, detail=repr(e))
+                            report.frames_damaged += 1
+                elif on_error == "raise":
+                    raise ContainerError(f"frame {i} missing from v3 container")
+                mask.append(part is not None)
+                if part is not None:
+                    parts.append(part)
+                elif on_error == "fill":
+                    parts.append(np.full(self._chunk_shape(header, i), np.float32(fill_value), np.float32))
+        finally:
+            self._telemetry_hold = hold
         if not report.ok:
             self.last_damage = {"report": report, "chunks_ok": mask, "on_error": on_error}
         if not parts:
@@ -722,13 +791,29 @@ class Compressor:
                 f"no decodable frames in damaged v3 container ({report.summary()})"
             )
         axis = int(header.get("axis", 0))
-        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=axis)
+        if len(parts) == 1:
+            return parts[0]
+        if out == "device":
+            return jnp.concatenate([jnp.asarray(p) for p in parts], axis=axis)
+        return np.concatenate(parts, axis=axis)
 
-    def _decompress_lorenzo(self, header, sections, shape) -> np.ndarray:
-        seq = pipelines.decode(sections[0])
+    def _decompress_lorenzo(self, header, sections, shape, device: bool = False) -> np.ndarray:
+        batch, spatial = header["batch"], tuple(header["spatial"])
         oi = np.frombuffer(sections[1], np.int64)
         ov = np.frombuffer(sections[2], np.int32)
-        batch, spatial = header["batch"], tuple(header["spatial"])
+        if device:
+            try:
+                seq = pipelines.decode(sections[0], device=True)
+                codes = seq.reshape((batch,) + spatial)
+                ofull = jnp.zeros(codes.size, jnp.int32)
+                if oi.size:
+                    ofull = ofull.at[jnp.asarray(oi)].set(jnp.asarray(ov))
+                out = lor.lorenzo_decode(codes, ofull.reshape(codes.shape),
+                                         jnp.float32(2.0 * header["eb_abs"]), len(spatial))
+                return out.reshape(shape)
+            except Exception as e:
+                self._record_fallback("decode", "device", "numpy", e)
+        seq = pipelines.decode(sections[0])
         codes = seq.reshape((batch,) + spatial)
         ofull = np.zeros(codes.size, np.int32)
         ofull[oi] = ov

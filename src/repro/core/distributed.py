@@ -88,29 +88,9 @@ def _pad_field_batch_jnp(xb, stride: int):
     return jnp.pad(xb, pads, mode="edge")
 
 
-def _gather_blocks_jnp(xpb, stride: int):
-    """jnp twin of blocks.gather_blocks_batch: (batch, *padded) -> (batch*nb, B..).
-
-    Pure data movement with static indices — bit-identical to the numpy
-    sliding-window gather, traceable inside shard_map.
-    """
-    B = stride + 1
-    ndim = xpb.ndim - 1
-    out = xpb
-    nbs = []
-    for d in range(ndim):
-        ax = 1 + d
-        nbd = (out.shape[ax] - 1) // stride
-        nbs.append(nbd)
-        idx = (np.arange(nbd)[:, None] * stride + np.arange(B)[None, :]).reshape(-1)
-        out = jnp.take(out, jnp.asarray(idx), axis=ax)
-    shp = [out.shape[0]]
-    for nbd in nbs:
-        shp += [nbd, B]
-    out = out.reshape(shp)
-    perm = [0] + [1 + 2 * d for d in range(ndim)] + [2 + 2 * d for d in range(ndim)]
-    out = jnp.transpose(out, perm)
-    return out.reshape((xpb.shape[0] * int(np.prod(nbs)),) + (B,) * ndim)
+# moved to blocks.py so the decompress device tail shares it; the old name
+# stays importable for existing callers
+_gather_blocks_jnp = blk.gather_blocks_batch_jnp
 
 
 def _fold_chunk(chunk):
@@ -419,13 +399,33 @@ def _first_value(xd, i: int, k: int, axis: int) -> float:
 
 
 # --------------------------------------------------------------- decompress
+def _decode_workers() -> int:
+    """Frame-decode thread count: REPRO_DECODE_WORKERS env override, else 1.
+
+    The default stays sequential (thread fan-out is a policy the caller or
+    the environment opts into — CI pins the env for determinism); any
+    positive value sizes the per-call thread pool in shard_decompress.
+    """
+    import os
+
+    try:
+        env = int(os.environ.get("REPRO_DECODE_WORKERS", "0"))
+    except ValueError:
+        env = 0
+    return env if env > 0 else 1
+
+
 def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
                      on_error: str = "raise", fill_value: float = 0.0,
-                     compressor: Compressor | None = None) -> np.ndarray:
+                     compressor: Compressor | None = None, out: str = "numpy"):
     """Decode a v3 chunk stream; ``frames_sel`` selects a subset (any order).
 
     ``workers > 1`` decodes frames on a thread pool — frames are
-    independent containers, so decode parallelism needs no coordination.
+    independent containers, so decode parallelism needs no coordination;
+    with ``out="device"`` each worker decodes its frame straight onto the
+    device (host I/O and device decode overlap across frames) and the
+    chunks concatenate device-side. ``workers=None`` reads the
+    ``REPRO_DECODE_WORKERS`` env override (default 1, sequential).
 
     ``on_error="skip"``/``"fill"``: salvage decode of damaged streams,
     same semantics as :meth:`Compressor.decompress` — damaged chunks are
@@ -433,8 +433,11 @@ def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
     ``compressor`` to read the damage mask back from its ``last_damage``.
     """
     comp = compressor if compressor is not None else Compressor(CompressorSpec())
-    if not workers or workers <= 1:
-        return comp.decompress(buf, frames=frames_sel, on_error=on_error, fill_value=fill_value)
+    if workers is None:
+        workers = _decode_workers()
+    if workers <= 1:
+        return comp.decompress(buf, frames=frames_sel, on_error=on_error,
+                               fill_value=fill_value, out=out)
     comp.last_damage = None
     header, payloads, report = comp._salvage_payloads(buf, on_error)
     if header.get("kind") != "chunks":
@@ -454,7 +457,7 @@ def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
                 raise ContainerError(f"frame {i} missing from v3 container")
             return None
         try:
-            return comp.decompress(p)
+            return comp.decompress(p, out=out)
         except Exception as e:
             if on_error == "raise":
                 raise
@@ -462,8 +465,14 @@ def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
             report.frames_damaged += 1
             return None
 
-    with ThreadPoolExecutor(max_workers=workers) as ex:
-        raw = list(ex.map(_one, idx))
+    hold, comp._telemetry_hold = comp._telemetry_hold, True
+    if not hold:
+        comp.last_telemetry = None
+    try:
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            raw = list(ex.map(_one, idx))
+    finally:
+        comp._telemetry_hold = hold
     mask = [p is not None for p in raw]
     parts = []
     for i, p in zip(idx, raw):
@@ -476,4 +485,10 @@ def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
     if not parts:
         raise ContainerError(f"no decodable frames in damaged v3 container ({report.summary()})")
     axis = int(header.get("axis", 0))
-    return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=axis)
+    if len(parts) == 1:
+        result = parts[0]
+    else:
+        result = jnp.concatenate(parts, axis=axis) if out == "device" else np.concatenate(parts, axis=axis)
+    if out == "device" and isinstance(result, np.ndarray):
+        result = jnp.asarray(result)
+    return result

@@ -225,16 +225,22 @@ def frame_table(buf) -> tuple[dict, list[tuple[int, int, int]]]:
     return header, table
 
 
-def read_frame(buf, table_entry: tuple[int, int, int], *, verify: bool = True) -> bytes:
-    """Extract one frame payload by its :func:`frame_table` entry."""
+def read_frame(buf, table_entry: tuple[int, int, int], *, verify: bool = True) -> memoryview:
+    """Extract one frame payload by its :func:`frame_table` entry.
+
+    Returns a zero-copy ``memoryview`` of the payload (CRC-checked in
+    place) — the decode stack is bytes-like-tolerant end to end, so the
+    per-frame copy the old ``bytes()`` slice paid is gone. Call
+    ``bytes(...)`` on the result if you need an owning copy.
+    """
     off, size, crc = table_entry
-    frame = bytes(memoryview(buf)[off : off + size])
+    frame = memoryview(buf)[off : off + size]
     if verify and _crc(frame) != crc:
         raise FrameCRCError(f"frame CRC mismatch at offset {off} (corrupt container)", offset=off)
     return frame
 
 
-def unpack_frames(buf, *, verify: bool = True) -> tuple[dict, list[bytes]]:
+def unpack_frames(buf, *, verify: bool = True) -> tuple[dict, list[memoryview]]:
     """Parse a whole v3 stream into ``(header, [frame bytes, ...])``."""
     header, table = frame_table(buf)
     return header, [read_frame(buf, t, verify=verify) for t in table]

@@ -45,8 +45,15 @@ instead of recompiling per byte count. Huffman additionally splits
 inside u32 (the same slab trick — and the same byte-exact concatenation —
 as the threaded numpy encoder).
 
-Decode stays on the numpy reference path: decompression replays through
-host containers and was never the bottleneck this engine removes.
+Decode is symmetric: every encoder here has a ``<stage>_decode_device``
+twin under the same bit-identity contract, so the read path
+(:func:`repro.core.lossless.pipelines.decode` with ``device=True``, and
+``Compressor.decompress`` above it) keeps the stream device-resident from
+payload bytes to reconstructed field. Huffman decodes all chunks in
+parallel by gathering against the per-chunk byte-offset table the encoder
+emits into the section header (``"offs"``, a small versioned extension);
+legacy headers without it — and any stream a twin can't handle — fall
+back to the numpy reference decoder and re-upload, bit-identically.
 """
 from __future__ import annotations
 
@@ -71,11 +78,27 @@ def is_device(x) -> bool:
 
 
 def as_device_u8(x) -> jax.Array:
-    """Flat uint8 device view of ``x`` (cast, like ``ascontiguousarray``)."""
+    """Flat uint8 device view of ``x`` (cast, like ``ascontiguousarray``).
+
+    Accepts device arrays, numpy arrays, and raw bytes-like payloads
+    (bytes / bytearray / memoryview) — the decode twins take whatever the
+    pipeline stream hands them.
+    """
+    if isinstance(x, (bytes, bytearray, memoryview)):
+        x = np.frombuffer(x, np.uint8)
     arr = x if is_device(x) else jnp.asarray(np.ascontiguousarray(x))
     if arr.dtype != jnp.uint8:
         arr = arr.astype(jnp.uint8)
     return arr.reshape(-1)
+
+
+def _host_u8(x) -> np.ndarray:
+    """Flat uint8 *host* view of a payload (zero-copy where possible)."""
+    if is_device(x):
+        return np.asarray(x, np.uint8).reshape(-1)
+    if isinstance(x, np.ndarray):
+        return np.ascontiguousarray(x).view(np.uint8).reshape(-1)
+    return np.frombuffer(x, np.uint8)
 
 
 def _on_tpu() -> bool:
@@ -321,7 +344,93 @@ def hf_encode_device(data):
         cb_parts.append(jnp.asarray(np.frombuffer(tail_cb.tobytes(), np.uint8)))
         bit_parts.append(jnp.asarray(np.frombuffer(tail_bits, np.uint8)))
     payload = jnp.concatenate([jnp.asarray(lens)] + cb_parts + bit_parts)
-    return payload, {"n": n}
+    chunk_bytes = np.concatenate([np.asarray(p) for p in cb_parts]).view("<u2")
+    return payload, dict({"n": n}, **_hf.offset_table(chunk_bytes))
+
+
+# hf decode limits: past these the twin hands the stream to the numpy
+# reference decoder (which slabs/groups internally) and re-uploads.
+_HF_DEC_MAX_BYTES = _hf._DECODE_GROUP_BYTES
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _hf_dec(be: jax.Array, cursors: jax.Array, lut: jax.Array, maxlen: int):
+    """All chunks decode in lockstep: one lane per chunk, CHUNK/2 steps.
+
+    ``be``: the bitstream as big-endian u32 words (padded). ``cursors``:
+    per-lane absolute *bit* cursors (u32, from the header's byte-offset
+    table ×8). Each step peeks 32 bits straddling a word boundary and
+    resolves TWO symbols through the (len<<8|sym) prefix LUT — the same
+    double-symbol peek as the numpy ``_span_pairs`` hot loop, so lane c
+    step t yields exactly symbol ``c*CHUNK + 2t``. Everything stays u32
+    (x64 is off; mixed-width promotion would upcast). Out-of-range word
+    gathers clamp (jnp default), which only feeds garbage to lanes that
+    are past their chunk's real symbol count — trimmed by the caller.
+    """
+    beS1 = jnp.concatenate([be[1:], jnp.zeros(1, jnp.uint32)]) >> 1
+    shift = jnp.uint32(32 - maxlen)
+
+    def step(cur, _):
+        q = cur >> 5
+        r = cur & _U31
+        peek = (be[q] << r) | (beS1[q] >> (_U31 - r))
+        e1 = lut[peek >> shift]
+        ls1 = e1 >> 8
+        e2 = lut[(peek << ls1) >> shift]
+        return cur + ls1 + (e2 >> 8), jnp.stack([e1, e2]).astype(jnp.uint8)
+
+    _, sym = jax.lax.scan(step, cursors, None, length=_hf.CHUNK // 2)
+    # (CHUNK/2 steps, 2 syms, lanes) -> (CHUNK, lanes)
+    return sym.reshape(_hf.CHUNK, -1)
+
+
+def hf_decode_device(payload, header: dict):
+    """Device Huffman decode; bytes == ``huffman.decode``'s.
+
+    Needs the per-chunk byte-offset table (``header["offs"]``) to give
+    every chunk lane an independent bit cursor; legacy headers (no table,
+    or hex ``"lens"`` streams), oversized payloads, and >16-bit codebooks
+    decode through the host reference path and re-upload.
+    """
+    n = int(header["n"])
+    if n == 0:
+        return jnp.zeros(0, jnp.uint8)
+    offs = header.get("offs")
+    nchunks = -(-n // _hf.CHUNK)
+    usable = (
+        offs is not None
+        and "lens" not in header
+        and len(offs) == 4 * nchunks
+    )
+    if usable:
+        src = payload if is_device(payload) else None
+        hp = None if src is not None else _host_u8(payload)
+        lens = np.asarray(src[:256]) if src is not None else hp[:256]
+        maxlen = int(lens.max(initial=0))
+        total = (int(src.size) if src is not None else hp.size) - 256 - 2 * nchunks
+        usable = 0 < maxlen <= _hf.MAXLEN and 0 <= total <= _HF_DEC_MAX_BYTES
+    if not usable:
+        return jnp.asarray(_hf.decode(_host_u8(payload), header))
+    _, lens_c, first_code, sym_table, offsets, counts = _hf.canonical_codes(
+        lens.astype(np.uint8)
+    )
+    lut = jnp.asarray(
+        _hf._pair_lut(first_code, counts, sym_table, offsets, maxlen).astype(np.uint32)
+    )
+    bits0 = 256 + 2 * nchunks
+    bits = src[bits0:] if src is not None else jnp.asarray(hp[bits0:])
+    # pow2-bucketed word allocation: +8 bytes slack like the numpy _be32,
+    # padded with zeros so garbage lanes read zeros, not uninitialized mem
+    balloc = max(4096, 1 << (total + 8 - 1).bit_length())
+    bits = jnp.concatenate([bits, jnp.zeros(balloc - total, jnp.uint8)])
+    w = bits.reshape(-1, 4).astype(jnp.uint32)
+    be = (w[:, 0] << 24) | (w[:, 1] << 16) | (w[:, 2] << 8) | w[:, 3]
+    byte_off = np.frombuffer(offs, "<u4")
+    calloc = max(64, 1 << (nchunks - 1).bit_length())
+    cur = np.zeros(calloc, np.uint32)
+    cur[:nchunks] = byte_off * np.uint32(8)
+    out_t = _hf_dec(be, jnp.asarray(cur), lut, maxlen)
+    return out_t[:, :nchunks].T.reshape(-1)[:n]
 
 
 # ------------------------------------------------------------------ rre/rze
@@ -400,6 +509,77 @@ def rze_encode_device(data, k: int):
     return _rr_encode_device(data, k, zero_mode=True)
 
 
+@functools.partial(jax.jit, static_argnums=(2,))
+def _rr_expand(bitmap: jax.Array, kept: jax.Array, zero_mode: bool):
+    """Inverse of flags+compaction: expand kept rows back over all symbols.
+
+    ``bitmap``: packed MSB-first flags (padded, pad bits zero). ``kept``:
+    (alloc, k) rows, rows past the real count zero. RRE replays row
+    ``cumsum(flags)-1`` everywhere (run expansion); RZE gathers the same
+    but zeroes unflagged rows. A gather, not a scatter — XLA:CPU scatters
+    run an order of magnitude behind its gathers (same trade as encode).
+    """
+    shifts = 7 - jax.lax.iota(jnp.int32, 8)
+    bits = ((bitmap.astype(jnp.int32)[:, None] >> shifts) & 1).reshape(-1)
+    idx = jnp.cumsum(bits) - 1
+    rows = kept[jnp.maximum(idx, 0)]
+    if zero_mode:
+        rows = jnp.where((bits == 1)[:, None], rows, jnp.uint8(0))
+    return rows
+
+
+def _rr_decode_device(payload, header: dict, zero_mode: bool):
+    """Shared RRE/RZE device decode; bytes == the numpy decoders'."""
+    n, k, nsym = int(header["n"]), int(header["k"]), int(header["nsym"])
+    if nsym == 0:
+        return jnp.zeros(0, jnp.uint8)
+    if "top" in header:  # legacy hex-in-JSON header: host reference path
+        dec = _rre.rze_decode if zero_mode else _rre.rre_decode
+        return jnp.asarray(dec(_host_u8(payload).tobytes(), header))
+    src = payload if is_device(payload) else None
+    hp = None if src is not None else _host_u8(payload)
+
+    def pull(a, b):
+        return np.asarray(src[a:b]) if src is not None else hp[a:b]
+
+    # the recursive-bitmap metadata is tiny (1/8k of the stream): pull it
+    # to host for the level recursion, keep the kept rows device-side
+    top_len, n_levels = (int(v) for v in np.frombuffer(pull(0, 4), "<u2"))
+    off = 4 + 8 * 2 * n_levels
+    szs = np.frombuffer(pull(4, off), "<u8")
+    sizes = [int(s) for s in szs[:n_levels]]
+    lvl_sizes = [int(s) for s in szs[n_levels:]]
+    top = pull(off, off + top_len)
+    off += top_len
+    levels = []
+    for ls in lvl_sizes:
+        levels.append(pull(off, off + ls))
+        off += ls
+    bitmap = _rre._decompress_bitmap(top, levels, sizes)
+    count = int(np.unpackbits(bitmap, count=nsym).sum())
+    kept = src[off:] if src is not None else jnp.asarray(hp[off:])
+    # bucketed allocations (pad rows/bits zero) bound recompiles
+    nsym_p = -(-nsym // _SYM_PAD) * _SYM_PAD
+    bm = np.zeros(nsym_p // 8, np.uint8)
+    bm[: bitmap.size] = bitmap
+    alloc = max(-(-count // _SYM_PAD) * _SYM_PAD, _SYM_PAD)
+    kept_p = jnp.concatenate(
+        [kept, jnp.zeros(alloc * k - count * k, jnp.uint8)]
+    ).reshape(alloc, k)
+    rows = _rr_expand(jnp.asarray(bm), kept_p, zero_mode)
+    return rows.reshape(-1)[:n]
+
+
+def rre_decode_device(payload, header: dict):
+    """Device RRE-k decode; bytes == ``rre.rre_decode``'s."""
+    return _rr_decode_device(payload, header, zero_mode=False)
+
+
+def rze_decode_device(payload, header: dict):
+    """Device RZE-k decode; bytes == ``rre.rze_decode``'s."""
+    return _rr_decode_device(payload, header, zero_mode=True)
+
+
 # --------------------------------------------------------------------- tcms
 @jax.jit
 def _tcms_core(viewp: jax.Array) -> jax.Array:
@@ -422,6 +602,31 @@ def tcms_encode_device(data, k: int):
         d = jnp.concatenate([d, jnp.zeros(pad, jnp.uint8)])
     out = _tcms_core(d.reshape(nsym_p, k))[:nsym]
     return out.reshape(-1), {"n": n, "k": k}
+
+
+@jax.jit
+def _tcms_inv_core(viewp: jax.Array) -> jax.Array:
+    """Inverse bijection: numpy's ``~(x ^ msb)`` done bytewise on rows."""
+    v = viewp.astype(jnp.int32)
+    neg = (v[:, -1] & 0x80) != 0  # little-endian rows: last byte is the MSB
+    w = v.at[:, -1].set(v[:, -1] ^ 0x80)  # x ^ msb
+    out = jnp.where(neg[:, None], 255 - w, v)  # ~y bytewise == 255 - y
+    return out.astype(jnp.uint8)
+
+
+def tcms_decode_device(payload, header: dict):
+    """Device TCMS-k decode; bytes == ``tcms.tcms_decode``'s."""
+    n, k = int(header["n"]), int(header["k"])
+    if n == 0:
+        return jnp.zeros(0, jnp.uint8)
+    d = as_device_u8(payload)
+    nsym = -(-n // k)
+    nsym_p = max(-(-nsym // _SYM_PAD) * _SYM_PAD, _SYM_PAD)
+    pad = nsym_p * k - int(d.size)
+    if pad:
+        d = jnp.concatenate([d, jnp.zeros(pad, jnp.uint8)])
+    out = _tcms_inv_core(d.reshape(nsym_p, k))[:nsym]
+    return out.reshape(-1)[:n]
 
 
 # --------------------------------------------------------------------- bit1
@@ -459,3 +664,36 @@ def bit1_encode_device(data, block: int = _BIT1_BLOCK):
     else:
         planes = _bit1_core(arr)
     return planes.reshape(-1), {"n": n, "block": int(block)}
+
+
+@jax.jit
+def _bit1_inv_core(arr: jax.Array) -> jax.Array:
+    """jnp twin of the bitshuffle inverse (plane rows -> original bytes)."""
+    nb, block = arr.shape
+    shifts = (7 - jnp.arange(8, dtype=jnp.uint8))[None, None, :]
+    # payload byte (plane p, group q) holds bit p of bytes 8q..8q+7
+    bits = ((arr.reshape(nb, 8, block // 8)[:, :, :, None] >> shifts) & 1).reshape(
+        nb, 8, block
+    )
+    w = jnp.left_shift(jnp.int32(1), 7 - jax.lax.iota(jnp.int32, 8))
+    out = jnp.einsum("npq,p->nq", bits, w, preferred_element_type=jnp.int32)
+    return out.astype(jnp.uint8)
+
+
+def bit1_decode_device(payload, header: dict):
+    """Device BIT1 decode; bytes == ``bitshuffle.bitshuffle_decode``'s.
+
+    Pallas inverse kernel on TPU, the jnp twin elsewhere — same bit layout
+    either way.
+    """
+    n, block = int(header["n"]), int(header["block"])
+    if n == 0:
+        return jnp.zeros(0, jnp.uint8)
+    arr = as_device_u8(payload).reshape(-1, block)
+    if _on_tpu():
+        from repro.kernels.bitshuffle.bitshuffle import bitunshuffle_pallas_raw
+
+        out = bitunshuffle_pallas_raw(arr, False, tile_blocks=1)
+    else:
+        out = _bit1_inv_core(arr)
+    return out.reshape(-1)[:n]

@@ -264,7 +264,24 @@ def encode(data: np.ndarray):
     bits = b"".join(p[0] for p in parts)
     chunk_bytes = np.concatenate([p[1] for p in parts])
     blob = lens.tobytes() + chunk_bytes.tobytes()
-    return blob + bits, {"n": int(n)}
+    return blob + bits, dict({"n": int(n)}, **offset_table(chunk_bytes))
+
+
+def offset_table(chunk_bytes: np.ndarray) -> dict:
+    """Per-chunk byte-offset header extension from the chunk sizes.
+
+    ``{"offs": <u4 exclusive byte offset per chunk>}`` — the random-access
+    table the device decoder gathers against (every chunk's bitstream
+    start, so all chunks decode in parallel without replaying the size
+    prefix sum serially). Omitted for payloads past the u32 range; headers
+    without it (legacy streams) decode through the host reference path.
+    """
+    cum = np.cumsum(chunk_bytes.astype(np.int64))
+    if cum.size and cum[-1] >= 1 << 32:
+        return {}
+    offs = np.zeros(cum.size, "<u4")
+    offs[1:] = cum[:-1]
+    return {"offs": offs.tobytes()}
 
 
 # --------------------------------------------------------------------- decode

@@ -19,7 +19,10 @@ bytes only land on host once, in the final packed stream. The engine's
 bit-identity contract makes the result byte-equal to the numpy path, so
 the choice of path is invisible to decoders and golden fixtures. A stage
 without a device twin (e.g. ``zstd``) drops the stream to host and the
-remaining stages run the numpy path.
+remaining stages run the numpy path. ``decode(buf, device=True)`` is the
+symmetric read path: stages with ``decode_device`` twins chain the stream
+device-resident back to a device uint8 array, same bytes as the host
+decode.
 
 Stream format (v2, this module's framing): ``b"LLP2"`` magic, then one
 record per stage — flags byte (bit0 = store-through skip for stages that
@@ -132,37 +135,61 @@ def encode(data, pipeline: str | tuple) -> bytes:
     return bytes(out)
 
 
-def decode(buf: bytes) -> np.ndarray:
-    if buf[:4] == _MAGIC:
-        nstages = buf[4]
+def decode(buf, *, device: bool = False):
+    """Decode a pipeline stream back to the uint8 code stream.
+
+    ``buf`` is any bytes-like object (bytes, bytearray, memoryview, uint8
+    ndarray) — the v3 frame reader hands memoryviews straight through and
+    the payload is sliced, never copied. With ``device=True`` the stream
+    decodes through the stages' ``decode_device`` twins, chaining between
+    device-capable stages as a device array (a stage without a twin pulls
+    the stream to host for that hop), and the return value is a device
+    uint8 array; the bytes are identical to the host path either way.
+    """
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+    if mv[:4] == _MAGIC:
+        nstages = mv[4]
         off = 5
         recs = []
         for _ in range(nstages):
-            flags, nlen = struct.unpack_from("<BB", buf, off)
+            flags, nlen = struct.unpack_from("<BB", mv, off)
             off += 2
-            name = bytes(buf[off : off + nlen]).decode()
+            name = bytes(mv[off : off + nlen]).decode()
             off += nlen
-            (hlen,) = struct.unpack_from("<I", buf, off)
+            (hlen,) = struct.unpack_from("<I", mv, off)
             off += 4
-            recs.append((name, flags, bytes(buf[off : off + hlen])))
+            recs.append((name, flags, bytes(mv[off : off + hlen])))
             off += hlen
-        cur = buf[off:]
+        cur = mv[off:]
         for name, flags, hb in reversed(recs):
             if flags & 1:
                 continue
             st = get_stage(name)
-            out = st.decode(cur, st.unpack_header(hb))
+            hdr = st.unpack_header(hb)
+            if device and st.decode_device is not None:
+                cur = st.decode_device(cur, hdr)  # device uint8 stream
+                continue
+            if _is_jax(cur):  # twin-less stage: pull the stream to host
+                cur = np.asarray(cur)
+            out = st.decode(cur, hdr)
             cur = out.tobytes() if isinstance(out, np.ndarray) else out
-        return np.frombuffer(cur, np.uint8)
-    # legacy stream: u32 length-prefixed JSON meta, dict headers
-    mlen = int.from_bytes(buf[:4], "little")
-    meta = json.loads(buf[4 : 4 + mlen])
-    cur = buf[4 + mlen :]
-    for name, hdr in zip(reversed(meta["stages"]), reversed(meta["headers"])):
-        if hdr.get("_skip"):
-            continue
-        out = get_stage(name).decode(cur, hdr)
-        cur = out.tobytes() if isinstance(out, np.ndarray) else out
+    else:
+        # legacy stream: u32 length-prefixed JSON meta, dict headers (whose
+        # hex-blob fields the twins would host-fallback on anyway)
+        mlen = int.from_bytes(mv[:4], "little")
+        meta = json.loads(bytes(mv[4 : 4 + mlen]))
+        cur = mv[4 + mlen :]
+        for name, hdr in zip(reversed(meta["stages"]), reversed(meta["headers"])):
+            if hdr.get("_skip"):
+                continue
+            out = get_stage(name).decode(cur, hdr)
+            cur = out.tobytes() if isinstance(out, np.ndarray) else out
+    if device:
+        from . import engine
+
+        return engine.as_device_u8(cur)
+    if _is_jax(cur):
+        return np.asarray(cur).reshape(-1)
     return np.frombuffer(cur, np.uint8)
 
 
@@ -177,6 +204,9 @@ def encode_v1(data: np.ndarray, pipeline: str | tuple) -> bytes:
     headers = []
     for name in stages:
         payload, hdr = get_stage(name).encode(cur)
+        # binary header extensions (e.g. hf's "offs" table) can't ride JSON;
+        # v1 streams decode through the host reference path without them
+        hdr = {k: v for k, v in hdr.items() if not isinstance(v, (bytes, bytearray))}
         nxt = np.frombuffer(payload, np.uint8) if isinstance(payload, bytes) else payload
         if nxt.size + len(json.dumps(hdr)) >= cur.size and cur.size > 0:
             headers.append({"_skip": True})  # stage expands: store-through

@@ -19,6 +19,11 @@ bit-plane shuffle, ...). Each stage is self-describing:
   uint8 payload, byte-identical to ``encode``'s (the engine contract, see
   repro.core.lossless.engine). Stages without one fall back to the numpy
   path when a pipeline runs device-resident.
+* ``decode_device(payload, header) -> jax.Array`` — optional device twin
+  of ``decode`` under the same bit-identity contract, accepting host
+  bytes-like or device uint8 payloads and returning a *device* uint8
+  stream. Stages without one pull the stream to host when a pipeline
+  decodes device-resident.
 
 Third-party stages register with :func:`register_stage` and are immediately
 usable in :func:`repro.core.lossless.pipelines.register_pipeline` — core
@@ -52,8 +57,9 @@ class Stage:
     # (checkpoints, relayed gradients) restrict auto-selection to portable
     # pipelines so they stay restorable on any machine.
     portable: bool = True
-    # device twin of encode (bit-identity contract); None = host-only stage
+    # device twins (bit-identity contract); None = host-only direction
     encode_device: Callable | None = None
+    decode_device: Callable | None = None
 
 
 _REGISTRY: dict[str, Stage] = {}
@@ -77,6 +83,7 @@ def register_stage(
     unpack_header: Callable[[bytes], dict] | None = None,
     portable: bool = True,
     encode_device: Callable | None = None,
+    decode_device: Callable | None = None,
     overwrite: bool = False,
 ) -> Stage:
     """Register a lossless stage under ``name``.
@@ -99,6 +106,7 @@ def register_stage(
         unpack_header=unpack_header or _json_unpack,
         portable=portable,
         encode_device=encode_device,
+        decode_device=decode_device,
     )
     _REGISTRY[name] = stage
     return stage
@@ -123,11 +131,23 @@ def registered_stages() -> dict[str, Stage]:
 # fixed-width integers, so headers pack to <= 17 bytes.
 
 def _pack_hf(h):
-    return struct.pack("<Q", h["n"])
+    # versioned: the bare 8-byte form predates the per-chunk byte-offset
+    # table ("offs", see huffman.offset_table) and still decodes — streams
+    # without it just lose the device decoder's parallel chunk entry points.
+    offs = h.get("offs")
+    if offs is None:
+        return struct.pack("<Q", h["n"])
+    return struct.pack("<QB", h["n"], 1) + offs
 
 
 def _unpack_hf(raw):
-    return {"n": struct.unpack_from("<Q", raw)[0]}
+    if len(raw) == 8:
+        return {"n": struct.unpack_from("<Q", raw)[0]}
+    n, ver = struct.unpack_from("<QB", raw)
+    out = {"n": n}
+    if ver == 1:
+        out["offs"] = bytes(raw[9:])
+    return out
 
 
 def _pack_rre(h):
@@ -173,7 +193,8 @@ def _unpack_zstd(raw):
 
 def _est_hf(s):
     n = max(int(s.get("n", 1)), 1)
-    table = (256.0 + 2.0 * (n // _hf.CHUNK + 1)) / n
+    # 256B lens + per chunk: 2B payload size + 4B header byte-offset entry
+    table = (256.0 + 6.0 * (n // _hf.CHUNK + 1)) / n
     return min(1.0, s["entropy"] / 8.0 + table)
 
 
@@ -240,28 +261,44 @@ def _dev(fn_name: str, **fixed):
     return call
 
 
+def _devd(fn_name: str):
+    # decode twins take a uniform (payload, header) signature — any stage
+    # parameter (k, block) already rides in the header
+    def call(payload, header, _fn=fn_name):
+        from . import engine
+
+        return getattr(engine, _fn)(payload, header)
+
+    return call
+
+
 def _register_builtins() -> None:
     register_stage("hf", _hf.encode, _hf.decode, estimate=_est_hf,
                    pack_header=_pack_hf, unpack_header=_unpack_hf,
-                   encode_device=_dev("hf_encode_device"))
+                   encode_device=_dev("hf_encode_device"),
+                   decode_device=_devd("hf_decode_device"))
     register_stage("bit1", _bit.bitshuffle_encode, _bit.bitshuffle_decode,
                    estimate=_est_unit, pack_header=_pack_bit, unpack_header=_unpack_bit,
-                   encode_device=_dev("bit1_encode_device"))
+                   encode_device=_dev("bit1_encode_device"),
+                   decode_device=_devd("bit1_decode_device"))
     # not portable: when zstandard is installed at encode time, decoding the
     # stream needs it too (the zlib fallback only engages when it's absent);
-    # also host-only — no device twin
+    # also host-only — no device twins
     register_stage("zstd", _zstd_encode, _zstd_decode, estimate=_est_zstd,
                    pack_header=_pack_zstd, unpack_header=_unpack_zstd, portable=False)
     for k in (1, 2, 4, 8):
         register_stage(f"rre{k}", (lambda d, k=k: _rre.rre_encode(d, k)), _rre.rre_decode,
                        estimate=_est_rre(k), pack_header=_pack_rre, unpack_header=_unpack_rre,
-                       encode_device=_dev("rre_encode_device", k=k))
+                       encode_device=_dev("rre_encode_device", k=k),
+                       decode_device=_devd("rre_decode_device"))
         register_stage(f"rze{k}", (lambda d, k=k: _rre.rze_encode(d, k)), _rre.rze_decode,
                        estimate=_est_rze(k), pack_header=_pack_rre, unpack_header=_unpack_rre,
-                       encode_device=_dev("rze_encode_device", k=k))
+                       encode_device=_dev("rze_encode_device", k=k),
+                       decode_device=_devd("rze_decode_device"))
         register_stage(f"tcms{k}", (lambda d, k=k: _tcms.tcms_encode(d, k)), _tcms.tcms_decode,
                        estimate=_est_unit, pack_header=_pack_tcms, unpack_header=_unpack_tcms,
-                       encode_device=_dev("tcms_encode_device", k=k))
+                       encode_device=_dev("tcms_encode_device", k=k),
+                       decode_device=_devd("tcms_decode_device"))
 
 
 _register_builtins()

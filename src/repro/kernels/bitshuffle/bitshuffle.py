@@ -29,6 +29,34 @@ def _kernel(x_ref, o_ref):
     o_ref[...] = packed.reshape(T, BLOCK).astype(jnp.uint8)
 
 
+def _inv_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.int32)  # (T, block) plane-major payload
+    T, BLOCK = x.shape
+    # payload byte (plane p, group q) holds bit p of bytes 8q..8q+7; unpack
+    # MSB first with iota-built shifts (Pallas kernels cannot capture
+    # array constants), giving bits[t, p, i] = bit p of original byte i
+    sh = 7 - jax.lax.iota(jnp.int32, 8)
+    g = x.reshape(T, 8, BLOCK // 8)
+    bits = ((g[:, :, :, None] >> sh) & 1).reshape(T, 8, BLOCK)
+    # re-pack across planes: byte i = sum_p bits[p, i] << (7-p)
+    w = jnp.left_shift(jnp.int32(1), 7 - jax.lax.iota(jnp.int32, 8))
+    out = jnp.einsum("tpq,p->tq", bits, w, preferred_element_type=jnp.int32)
+    o_ref[...] = out.astype(jnp.uint8)
+
+
+def _pallas_apply(kernel, x, interpret: bool, tile_blocks: int):
+    n, block = x.shape
+    spec = pl.BlockSpec((tile_blocks, block), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile_blocks,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
+        interpret=interpret,
+    )(x)
+
+
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def bitshuffle_pallas_raw(x: jnp.ndarray, interpret: bool = True,
                           tile_blocks: int = TILE_BLOCKS):
@@ -39,13 +67,11 @@ def bitshuffle_pallas_raw(x: jnp.ndarray, interpret: bool = True,
     8192-byte-block layout (``tile_blocks=1``) while the default 1024-byte
     call sites keep their 8-block tiles.
     """
-    n, block = x.shape
-    spec = pl.BlockSpec((tile_blocks, block), lambda i: (i, 0))
-    return pl.pallas_call(
-        _kernel,
-        grid=(n // tile_blocks,),
-        in_specs=[spec],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint8),
-        interpret=interpret,
-    )(x)
+    return _pallas_apply(_kernel, x, interpret, tile_blocks)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def bitunshuffle_pallas_raw(x: jnp.ndarray, interpret: bool = True,
+                            tile_blocks: int = TILE_BLOCKS):
+    """Inverse of :func:`bitshuffle_pallas_raw` (same tiling contract)."""
+    return _pallas_apply(_inv_kernel, x, interpret, tile_blocks)

@@ -74,8 +74,10 @@ def _kv_roundtrip(cache, eb: float):
         by_frame = dict(enumerate(framed))
         for k, frame in reader.iter_frames(on_error="skip"):
             i = by_frame[k]
-            out = comp.decompress(frame).reshape(leaves[i].shape)
-            leaves[i] = jnp.asarray(out, leaves[i].dtype)
+            # decompress straight onto device: the decode twins keep the
+            # stream resident, so the restored page never bounces via host
+            out = comp.decompress(frame, out="device").reshape(leaves[i].shape)
+            leaves[i] = out.astype(leaves[i].dtype)
         if not reader.damage.ok:
             stats["damage"] = reader.damage.summary()
     cache = jax.tree.unflatten(treedef, leaves)

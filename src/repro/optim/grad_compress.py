@@ -102,11 +102,16 @@ def pack_quantized(q, scale, pipeline: str = "auto") -> bytes:
     return struct.pack("<I", len(hb)) + hb + payload
 
 
-def unpack_quantized(buf: bytes):
-    """Inverse of :func:`pack_quantized`: returns ``(q int8, scale)``."""
-    (hlen,) = struct.unpack_from("<I", buf, 0)
-    hdr = unpack_obj(buf[4 : 4 + hlen])
-    stream = pipelines.decode(buf[4 + hlen :])
+def unpack_quantized(buf):
+    """Inverse of :func:`pack_quantized`: returns ``(q int8, scale)``.
+
+    ``buf`` is any bytes-like object; the payload is decoded from a
+    zero-copy view (the sharded reader hands frames through as
+    memoryviews)."""
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+    (hlen,) = struct.unpack_from("<I", mv, 0)
+    hdr = unpack_obj(mv[4 : 4 + hlen])
+    stream = pipelines.decode(mv[4 + hlen :])
     q = (stream ^ np.uint8(0x80)).view(np.int8).reshape(hdr["shape"])
     return q, hdr["scale"]
 
