@@ -1,0 +1,104 @@
+"""Service-lane regression gate for CI (service job).
+
+    PYTHONPATH=src python -m benchmarks.check_service_regression \
+        --baseline BENCH_compressd_smoke.json --fresh bench_compressd_smoke.json
+
+Compares a fresh ``benchmarks.bench_compressd`` JSON against the
+committed baseline:
+
+* **grid mismatch** (different smoke flag, client count, shapes or eb):
+  exit 1 — unlike runs must not be compared;
+* **missing baseline file**: note + exit 0 — a freshly added lane (or a
+  branch predating the baseline) skips with a note instead of failing,
+  mirroring the bench-smoke job's missing-dimension policy;
+* **p99 latency gate**: compress and decompress p99 must stay within
+  ``--max-slowdown``x of baseline (default 4x — CI machines vary widely;
+  the gate catches order-of-magnitude service regressions like a lost
+  plan cache or an admission deadlock, not scheduler jitter);
+* **throughput gate**: aggregate MB/s must stay above baseline divided
+  by the same slowdown factor;
+* **CR gate**: within ``--max-cr-drop-pct`` (default 2%) — the fields
+  are seeded, so CR is deterministic;
+* **plan-cache gate**: the fresh run's ``plan_cache_ok`` assertion (every
+  post-warmup compress a hit) must hold, and the daemon-side hit rate
+  must not drop more than ``--max-hit-rate-drop`` absolute.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GRID_FIELDS = ("bench", "smoke", "clients", "requests_per_client", "eb", "shapes")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-slowdown", type=float, default=4.0,
+                    help="p99 latency may grow (and MB/s shrink) by this factor")
+    ap.add_argument("--max-cr-drop-pct", type=float, default=2.0)
+    ap.add_argument("--max-hit-rate-drop", type=float, default=0.05,
+                    help="absolute drop allowed in daemon plan-cache hit rate")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"note: baseline {args.baseline} not committed yet; skipping the "
+              "service gate (run bench_compressd --smoke and commit the JSON "
+              "to arm it)")
+        return 0
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    for field in GRID_FIELDS:
+        if base.get(field) != fresh.get(field):
+            print(f"GRID MISMATCH: {field} baseline={base.get(field)!r} "
+                  f"fresh={fresh.get(field)!r} (the gate only compares "
+                  "like-for-like runs)")
+            return 1
+
+    failures = []
+    if not fresh.get("plan_cache_ok", False):
+        failures.append("plan_cache_ok is false: post-warmup compresses missed "
+                        f"({len(fresh.get('plan_cache_misses_post_warmup', []))} misses)")
+    b_hr = float(base.get("plan_cache", {}).get("hit_rate", 0.0))
+    f_hr = float(fresh.get("plan_cache", {}).get("hit_rate", 0.0))
+    if f_hr < b_hr - args.max_hit_rate_drop:
+        failures.append(f"plan-cache hit rate {b_hr:.3f} -> {f_hr:.3f} "
+                        f"(allowed drop {args.max_hit_rate_drop})")
+
+    for op in ("compress", "decompress"):
+        b_op, f_op = base.get(op, {}), fresh.get(op, {})
+        bp99, fp99 = float(b_op.get("p99_ms", 0)), float(f_op.get("p99_ms", 0))
+        if bp99 > 0 and fp99 > bp99 * args.max_slowdown:
+            failures.append(f"{op} p99 {bp99:.1f} ms -> {fp99:.1f} ms "
+                            f"(> {args.max_slowdown:g}x)")
+        bmb, fmb = float(b_op.get("mbps_aggregate", 0)), float(f_op.get("mbps_aggregate", 0))
+        if bmb > 0 and fmb < bmb / args.max_slowdown:
+            failures.append(f"{op} aggregate {bmb:.1f} MB/s -> {fmb:.1f} MB/s "
+                            f"(< 1/{args.max_slowdown:g}x)")
+
+    bcr, fcr = float(base.get("cr", 0)), float(fresh.get("cr", 0))
+    if bcr > 0 and fcr < bcr * (1 - args.max_cr_drop_pct / 100.0):
+        failures.append(f"CR {bcr:.3f} -> {fcr:.3f} "
+                        f"(> {args.max_cr_drop_pct:g}% drop)")
+
+    if failures:
+        print("SERVICE REGRESSIONS:")
+        for f_ in failures:
+            print(" ", f_)
+        return 1
+    print(f"service gate: p99 within {args.max_slowdown:g}x "
+          f"(compress {float(base['compress']['p99_ms']):.1f} -> "
+          f"{float(fresh['compress']['p99_ms']):.1f} ms), CR {bcr:.3f} -> {fcr:.3f}, "
+          f"plan-cache hits asserted ({fresh['compress'].get('n', 0)} ops, "
+          f"daemon hit rate {f_hr:.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

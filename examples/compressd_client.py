@@ -1,0 +1,81 @@
+"""Talk to a compressd daemon: the multi-tenant service front end.
+
+Boots an in-process daemon by default so the example is self-contained;
+pass ``--addr HOST:PORT`` (or ``unix:/path``) to target one started with
+
+    PYTHONPATH=src python -m repro.launch.compressd --addr 127.0.0.1:7733
+
+Two tenants stream fields concurrently: a "checkpoint" stream writing
+the same tensor shape every step and a "kv" stream paging KV-shaped
+tensors. After the first request per signature, every compress is a
+plan-cache hit — the daemon replays the recorded predictor plan and
+pipeline choice instead of re-autotuning — and the final ``stats`` call
+shows per-stream CR/MB/s plus the shared cache's hit rate.
+
+    PYTHONPATH=src python examples/compressd_client.py
+"""
+import argparse
+import json
+import threading
+
+import numpy as np
+
+from repro.launch.compressd import CompressdClient, CompressdServer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--addr", default=None, help="existing daemon (default: boot in-process)")
+ap.add_argument("--steps", type=int, default=4)
+args = ap.parse_args()
+
+server = None
+addr = args.addr
+if addr is None:
+    server = CompressdServer("127.0.0.1:0", workers=4).start()
+    addr = server.address
+    print(f"booted in-process daemon at {addr}")
+
+
+def checkpoint_tenant():
+    """Same parameter geometry every save step — the plan cache's home turf."""
+    rng = np.random.default_rng(0)
+    g = np.linspace(0, 4 * np.pi, 48)
+    base = (np.sin(g)[:, None, None] * np.cos(g)[None, :, None] * np.sin(g)[None, None, :])
+    with CompressdClient(addr, stream="checkpoint") as c:
+        for step in range(args.steps):
+            x = (base + 0.01 * step + 0.005 * rng.standard_normal(base.shape)).astype(np.float32)
+            buf = c.compress(x, eb=1e-3, predictor="auto", pipeline="auto")
+            info = c.last_info
+            print(f"  checkpoint step {step}: CR {info['cr']:.2f}, "
+                  f"pipeline {info['pipeline']}, plan_cache {info['plan_cache']}")
+            y = c.decompress(buf)
+            assert np.max(np.abs(x - y)) <= 1e-3 * (x.max() - x.min()) * (1 + 1e-5)
+
+
+def kv_tenant():
+    """KV-page shapes: a couple of fixed (heads, seq, dim) signatures."""
+    rng = np.random.default_rng(1)
+    with CompressdClient(addr, stream="kv") as c:
+        for step in range(args.steps):
+            shape = (4, 64, 32) if step % 2 == 0 else (4, 32, 32)
+            x = np.cumsum(rng.standard_normal(shape), axis=1).astype(np.float32)
+            c.compress(x, eb=1e-2, pipeline="auto")
+            info = c.last_info
+            print(f"  kv page {step} {shape}: CR {info['cr']:.2f}, "
+                  f"plan_cache {info['plan_cache']}")
+
+
+threads = [threading.Thread(target=checkpoint_tenant), threading.Thread(target=kv_tenant)]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+
+with CompressdClient(addr) as c:
+    st = c.stats()
+print("\nper-stream telemetry:")
+for name, rec in sorted(st["streams"].items()):
+    print(f"  {name}: {rec['requests']} requests, CR {rec['cr']:.2f}, "
+          f"{rec['mbps']:.1f} MB/s, {rec['plan_cache_hits']} cache hits")
+print("shared plan cache:", json.dumps(st["plan_cache"]))
+if server is not None:
+    server.close()

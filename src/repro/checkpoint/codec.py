@@ -36,6 +36,7 @@ a default change.
 from __future__ import annotations
 
 import io
+import os
 import zlib
 
 import numpy as np
@@ -100,7 +101,8 @@ class _CountingSink:
             self._f.flush()
 
 
-def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, retry: bool = True) -> dict:
+def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, retry: bool = True,
+                     compressd: str | None = None) -> dict:
     """Encode ``x`` into file-like ``f``; returns the manifest meta (with
     ``bytes`` and a whole-payload ``crc32``). eb = 0 -> lossless; eb > 0
     -> value-range-relative bound.
@@ -113,13 +115,39 @@ def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, retry: bool = True) -
     ``OSError`` from a flaky filesystem is retried with exponential
     backoff + jitter instead of killing the save; the retry count lands
     in the returned meta (``io_retries``) when nonzero.
+
+    ``compressd`` (or the ``REPRO_COMPRESSD`` env var) routes the
+    error-bounded encode through a :mod:`repro.launch.compressd` daemon at
+    that address: checkpoints repeat the same tensor shapes every save, so
+    the daemon's shared plan cache skips re-autotuning from the second
+    save on. Daemon leaves are written as one single-container payload
+    (``mode="cuszhi"``) — restore needs no daemon and uses the normal
+    :func:`decode_tensor` path.
     """
     meta = {"shape": list(x.shape), "dtype": str(x.dtype)}
     rf = RetryingWriter(f) if retry else f
     sink = _CountingSink(rf)
+    compressd = compressd or os.environ.get("REPRO_COMPRESSD") or None
     if eb > 0 and x.dtype in (np.float32, np.float64) and x.size >= 4096:
-        comp = _eb_compressor(eb)
         field = _as_field(x.astype(np.float32))
+        if compressd:
+            from repro.launch.compressd import CompressdClient
+
+            with CompressdClient(compressd, stream="checkpoint") as client:
+                buf = client.compress(
+                    field, eb=eb, predictor="auto", pipeline=_EB_PIPELINE,
+                    pipeline_candidates=tuple(portable_pipelines()))
+                info = client.last_info or {}
+            sink.write(buf)
+            meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape),
+                        pipeline=_EB_PIPELINE, predictor="auto",
+                        bytes=sink.nbytes, crc32=sink.crc32,
+                        compressd={"plan_cache": info.get("plan_cache"),
+                                   "pipeline": info.get("pipeline")})
+            if retry and rf.retries:
+                meta["io_retries"] = rf.retries
+            return meta
+        comp = _eb_compressor(eb)
         n_frames = _n_frames(field)
         import jax
 

@@ -1,5 +1,5 @@
 """repro.core — cuSZ-Hi: synergistic lossy-lossless compression in JAX."""
-from .autotune import PredictorPlan, autotune_plan  # noqa: F401
+from .autotune import PredictorPlan, autotune_plan, plan_signature, stats_bucket  # noqa: F401
 from .distributed import chunk_compress, default_mesh, shard_compress, shard_decompress  # noqa: F401
 from .errors import (  # noqa: F401
     CheckpointDamageError,
@@ -7,8 +7,13 @@ from .errors import (  # noqa: F401
     DamageReport,
     FrameCRCError,
     FrameSyncError,
+    RequestTooLargeError,
+    ServiceError,
+    ServiceOverloadedError,
+    ServiceProtocolError,
     TruncatedContainerError,
 )
+from .plancache import PlanCache  # noqa: F401
 from .frames import FrameReader, FrameWriter, scan_frames  # noqa: F401
 from .retry import RetryPolicy, RetryingWriter, retry_call  # noqa: F401
 from .compressor import (  # noqa: F401

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +43,7 @@ from .lossless import orchestrate as orc
 from .lossless import pipelines as _pipelines
 from .predictor import CENTER, RADIUS, _anchor_mask, _predict, quantize_pred
 from .reorder import reorder_codes_batch
+from .serial import pack_obj, unpack_obj
 from .stencils import SCHEMES, SPLINES, build_steps
 
 SAMPLE_FRACTION = 0.002
@@ -160,6 +162,68 @@ class PredictorPlan:
             sampled_blocks=int(h.get("sampled_blocks", 0)),
             candidates=tuple((lbl, bits) for lbl, bits in h.get("candidates", ())),
         )
+
+    def to_bytes(self) -> bytes:
+        """Compact binary form (repro.core.serial) — the shape a plan-cache
+        entry or a service response carries a plan in."""
+        return pack_obj(self.to_header())
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "PredictorPlan":
+        return cls.from_header(unpack_obj(buf))
+
+
+# ---------------------------------------------------------- plan-cache keys
+_SIG_VERSION = "ps1"        # bump when signature semantics change
+_STATS_SAMPLE_CAP = 65536   # stats-bucket subsample size (uniform strided)
+_STD_BUCKET_QUARTERS = 4    # std bucket resolution: quarter powers of two
+
+
+def stats_bucket(x: np.ndarray) -> tuple[int, int]:
+    """Coarse distribution bucket of a field, for plan-cache keying.
+
+    Two integers: the power-of-two exponent of the value range, and the
+    range-normalized standard deviation quantized to quarter powers of
+    two. Fields whose tuning outcome would plausibly differ (a 1000x
+    larger dynamic range, a flat vs. a noisy field) land in different
+    buckets; run-to-run noise on the *same* recurring tensor does not —
+    that is the whole point: the millions-of-users case is the same
+    shapes with the same statistics arriving forever.
+
+    Cost: one strided subsample (<= ``_STATS_SAMPLE_CAP`` elements) and
+    two reductions — microseconds against the planner's trial encodes.
+    """
+    flat = np.asarray(x).reshape(-1)
+    if flat.size == 0:
+        return (0, 0)
+    if flat.size > _STATS_SAMPLE_CAP:
+        flat = flat[:: max(1, flat.size // _STATS_SAMPLE_CAP)]
+    lo = float(np.min(flat))
+    rng = float(np.max(flat)) - lo
+    if not math.isfinite(rng) or rng <= 0.0:
+        return (-(1 << 20), 0)  # constant (or non-finite) field: its own bucket
+    b_rng = math.frexp(rng)[1]
+    rel_std = float(np.std(flat)) / rng
+    if rel_std <= 0.0:
+        return (b_rng, -(1 << 20))
+    return (b_rng, int(round(_STD_BUCKET_QUARTERS * math.log2(rel_std))))
+
+
+def plan_signature(shape, dtype, eb: float, eb_mode: str, bucket=(), *, extra=()) -> tuple:
+    """Hashable plan-cache key: field geometry + error-bound config +
+    coarse stats bucket (+ caller extras, e.g. the spec knobs that steer
+    the tuner). Two fields share a signature exactly when a cached tuning
+    outcome for one is a valid (and near-optimal) plan for the other.
+    """
+    return (
+        _SIG_VERSION,
+        tuple(int(s) for s in shape),
+        np.dtype(dtype).str,
+        float(eb),
+        str(eb_mode),
+        tuple(bucket),
+        tuple(extra),
+    )
 
 
 # ------------------------------------------------------------ trial passes

@@ -66,6 +66,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
+import threading
 import time
 
 import jax.numpy as jnp
@@ -75,7 +76,15 @@ from . import blocks as blk
 from . import frames as frames_mod
 from . import lorenzo as lor
 from .errors import ContainerError, DamageReport, FrameCRCError
-from .autotune import DEFAULT_STRIDES, autotune, autotune_plan, levels_for_stride
+from .autotune import (
+    DEFAULT_STRIDES,
+    PredictorPlan,
+    autotune,
+    autotune_plan,
+    levels_for_stride,
+    plan_signature,
+    stats_bucket,
+)
 from .lossless import orchestrate, pipelines
 from .lossless.flenc import fl_decode, fl_encode
 from .predictor import compress_blocks, decompress_blocks
@@ -204,28 +213,82 @@ def _sections_unpack(buf: bytes):
     raise ValueError(f"bad container magic {bytes(buf[:6])!r}; expected {MAGIC!r} or {MAGIC_V1!r}")
 
 
+class _PerCallState(threading.local):
+    """Per-thread observability slots of a (possibly shared) Compressor.
+
+    One Compressor may serve many threads at once (the compressd worker
+    pool, shard_decompress's frame decoders): every per-call record —
+    telemetry, damage report, winning plan, the multi-chunk hold flag —
+    lives here so concurrent calls never see each other's state. The
+    public ``last_*`` attributes are compatibility views over this
+    storage: same-thread call-then-read behaves exactly as before.
+    """
+
+    telemetry = None
+    damage = None
+    plan = None
+    hold = False
+
+
 class Compressor:
-    def __init__(self, spec: CompressorSpec | None = None, **kw):
+    def __init__(self, spec: CompressorSpec | None = None, *, plan_cache=None, **kw):
         self.spec = spec or CompressorSpec(**kw)
-        # Filled by the last predictor="auto" compress(): the winning
-        # PredictorPlan with its scored alternatives (observability only;
-        # the container header records everything decode needs).
-        self.last_plan = None
-        # Per-call observability of the fault-tolerance layer:
+        # Optional repro.core.plancache.PlanCache (shareable across
+        # compressors and threads): memoizes the tuning outcome per field
+        # signature so recurring shapes skip re-autotuning. None (the
+        # default) = tune every call, the historical behavior.
+        self.plan_cache = plan_cache
+        # Per-call observability, stored per-*thread* (see _PerCallState):
+        #   last_plan — the winning PredictorPlan of the last predictor=
+        #     "auto" compress() on this thread (observability only; the
+        #     container header records everything decode needs).
         #   last_telemetry — reset by compress() and decompress(); records
         #     the requested backend/engine plus every fallback the ladder
         #     took (pallas predictor -> jax, device encode/reorder/pack/
-        #     decode -> numpy). decompress() additionally records a
-        #     "decode" dict (engine, out, seconds, bytes, mbps). The
-        #     bit-identity contract makes fallbacks invisible in the
-        #     output bytes, so this dict is how degradation stays
-        #     observable.
+        #     decode -> numpy), the plan-cache outcome ("plan_cache":
+        #     "hit"/"miss") and the chosen pipeline. decompress()
+        #     additionally records a "decode" dict (engine, out, seconds,
+        #     bytes, mbps). The bit-identity contract makes fallbacks
+        #     invisible in the output bytes, so this dict is how
+        #     degradation stays observable.
         #   last_damage — reset by decompress(); under on_error="skip"/
         #     "fill" records the DamageReport and the per-chunk intact
         #     mask of a salvaged v3 container (None = fully intact).
-        self.last_telemetry = None
-        self.last_damage = None
-        self._telemetry_hold = False  # multi-chunk producers accumulate
+        self._call = _PerCallState()
+
+    # ---- compatibility views over the per-thread call state: a thread
+    # reads exactly what its own calls recorded, never a concurrent one's
+    @property
+    def last_plan(self):
+        return self._call.plan
+
+    @last_plan.setter
+    def last_plan(self, value):
+        self._call.plan = value
+
+    @property
+    def last_telemetry(self):
+        return self._call.telemetry
+
+    @last_telemetry.setter
+    def last_telemetry(self, value):
+        self._call.telemetry = value
+
+    @property
+    def last_damage(self):
+        return self._call.damage
+
+    @last_damage.setter
+    def last_damage(self, value):
+        self._call.damage = value
+
+    @property
+    def _telemetry_hold(self):
+        return self._call.hold
+
+    @_telemetry_hold.setter
+    def _telemetry_hold(self, value):
+        self._call.hold = bool(value)
 
     def _telemetry(self) -> dict:
         if self.last_telemetry is None:
@@ -277,13 +340,17 @@ class Compressor:
             return self._compress_offset1d(x, eb_abs, base_hdr)
         raise ValueError(sp.predictor)
 
-    def _encode_codes(self, seq) -> tuple[bytes, dict]:
+    def _encode_codes(self, seq, pipeline_override: str | None = None) -> tuple[bytes, dict]:
         """Lossless-encode the code stream; returns (payload, header fields).
 
         ``pipeline="auto"`` routes through the orchestrator: the chosen
         pipeline plus the sampled statistics land in the container header
         (per field), so the selection is recorded, reproducible, and never
-        re-inferred at decode time.
+        re-inferred at decode time. ``pipeline_override`` (a plan-cache
+        hit replaying the pipeline the orchestrator chose for this field
+        signature) short-circuits the sampling/scoring pass and encodes
+        with the recorded pipeline directly; the header carries
+        ``pcached=True`` instead of the orchestrator's ``pchoice`` record.
 
         Engine dispatch: ``spec.engine`` decides whether ``seq`` is encoded
         by the numpy reference stages or the device engine
@@ -306,15 +373,20 @@ class Compressor:
                 self._record_fallback("encode", "device", "numpy", e)
         elif sp.engine == "numpy" and is_dev:
             seq = np.asarray(seq)
-        if sp.pipeline != "auto":
+        fixed = sp.pipeline if sp.pipeline != "auto" else pipeline_override
+        if fixed is not None:
+            hdr = {"pipeline": fixed}
+            if sp.pipeline == "auto":
+                hdr["pcached"] = True  # plan-cache replay, not a spec-fixed pipeline
+            self._telemetry()["pipeline"] = fixed
             try:
-                return pipelines.encode(seq, sp.pipeline), {"pipeline": sp.pipeline}
+                return pipelines.encode(seq, fixed), hdr
             except Exception as e:
                 if not pipelines._is_jax(seq):
                     raise  # host reference path: a real error, not a device fault
                 self._record_fallback("encode", "device", "numpy", e)
                 seq = np.asarray(seq)
-            return pipelines.encode(seq, sp.pipeline), {"pipeline": sp.pipeline}
+            return pipelines.encode(seq, fixed), hdr
         histogram = None
         if sp.backend == "pallas" and not pipelines._is_jax(seq):
             import jax
@@ -338,6 +410,7 @@ class Compressor:
                 raise
             payload, record = orchestrate.encode_auto(seq, candidates=sp.pipeline_candidates,
                                                       histogram=histogram)
+        self._telemetry()["pipeline"] = record["pipeline"]
         return payload, {"pipeline": record["pipeline"], "pchoice": record}
 
     @staticmethod
@@ -446,7 +519,8 @@ class Compressor:
         return stride, splines, schemes
 
     def _pack_interp(self, base_hdr: dict, *, cgrid: np.ndarray, anc: np.ndarray,
-                     oi: np.ndarray, ov: np.ndarray, stride: int, splines, schemes) -> bytes:
+                     oi: np.ndarray, ov: np.ndarray, stride: int, splines, schemes,
+                     pipeline_override: str | None = None) -> bytes:
         """Assemble the interp container from the post-predictor artifacts.
 
         Shared tail of the host path and the shard_map path
@@ -468,7 +542,7 @@ class Compressor:
                 seq = reorder_codes_batch(cgrid, stride, sp.reorder)
         else:
             seq = reorder_codes_batch(cgrid, stride, sp.reorder)
-        payload, penc = self._encode_codes(seq)
+        payload, penc = self._encode_codes(seq, pipeline_override=pipeline_override)
         header = dict(
             base_hdr,
             mode="interp",
@@ -490,6 +564,24 @@ class Compressor:
                                        oi.astype(np.int64, copy=False).tobytes(),
                                        ov.astype(np.float32, copy=False).tobytes()])
 
+    def _plan_cache_key(self, x: np.ndarray):
+        """Plan-cache signature of this field under this spec, or ``None``
+        when the call has nothing cacheable (no cache attached, or a fixed
+        spec that neither tunes the predictor nor picks a pipeline).
+
+        The key folds in every spec knob that steers the tuners, so one
+        cache can safely serve compressors with different specs.
+        """
+        sp = self.spec
+        if self.plan_cache is None or sp.predictor not in ("interp", "auto"):
+            return None
+        if not (sp.predictor == "auto" or sp.autotune or sp.pipeline == "auto"):
+            return None
+        extra = (sp.predictor, int(sp.anchor_stride), tuple(sp.plan_anchor_strides),
+                 bool(sp.autotune), bool(sp.reorder), sp.pipeline,
+                 tuple(sp.pipeline_candidates or ()))
+        return plan_signature(x.shape, x.dtype, sp.eb, sp.eb_mode, stats_bucket(x), extra=extra)
+
     def _compress_interp(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
         sp = self.spec
         xb, spatial = self._spatial_view(x)
@@ -498,9 +590,26 @@ class Compressor:
         padded = blk.pad_field_batch(xb, blk.ANCHOR_STRIDE)
         padded_shapes = padded.shape[1:]
         blocks = blk.gather_blocks_batch(padded, blk.ANCHOR_STRIDE)
-        stride, splines, schemes = self._tune_interp(blocks, eb_abs, batch, padded_shapes)
+        # plan cache: a recurring field signature replays the recorded
+        # tuning outcome — predictor plan AND (pipeline="auto") the
+        # orchestrator's pipeline choice — skipping both tuners entirely
+        ckey = self._plan_cache_key(x)
+        cached = self.plan_cache.get(ckey) if ckey is not None else None
+        pipe_override = None
+        if cached is not None:
+            self._telemetry()["plan_cache"] = "hit"
+            stride = int(cached["stride"])
+            splines, schemes = tuple(cached["splines"]), tuple(cached["schemes"])
+            if sp.predictor == "auto" and cached.get("plan") is not None:
+                self.last_plan = PredictorPlan.from_header(cached["plan"])
+            pipe_override = cached.get("pipeline")
+        else:
+            if ckey is not None:
+                self._telemetry()["plan_cache"] = "miss"
+            stride, splines, schemes = self._tune_interp(blocks, eb_abs, batch, padded_shapes)
         steps = build_steps(ndim, blk.BLOCK, levels_for_stride(stride), splines, schemes)
         codes_b, outl_b = self._run_predictor(blocks, eb_abs, steps, stride, ndim)
+        buf = None
         if sp.engine == "device":
             # fused tail: codes stay device-resident through block scatter,
             # level reorder, and the encoding engine (inside _pack_interp);
@@ -512,20 +621,33 @@ class Compressor:
                 anc = blk.anchor_grid_batch(padded, stride)
                 oi = np.asarray(jnp.flatnonzero(cgrid.reshape(-1) == 0)).astype(np.int64)
                 ov = padded.reshape(-1)[oi]
-                return self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
-                                         stride=stride, splines=splines, schemes=schemes)
+                buf = self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
+                                        stride=stride, splines=splines, schemes=schemes,
+                                        pipeline_override=pipe_override)
             except Exception as e:
                 # device tail failed (lowering/OOM/dead device): replay the
                 # numpy reference tail below — bit-identical container
                 self._record_fallback("pack", "device", "numpy", e)
-        codes_b, outl_b = np.asarray(codes_b), np.asarray(outl_b)
-        cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
-        ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
-        anc = blk.anchor_grid_batch(padded, stride)
-        oi = np.flatnonzero(ogrid.reshape(-1)).astype(np.int64)  # already batch-global
-        ov = padded.reshape(-1)[oi]
-        return self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
-                                 stride=stride, splines=splines, schemes=schemes)
+        if buf is None:
+            codes_b, outl_b = np.asarray(codes_b), np.asarray(outl_b)
+            cgrid = blk.scatter_blocks_batch(codes_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+            ogrid = blk.scatter_blocks_batch(outl_b, batch, padded_shapes, blk.ANCHOR_STRIDE)
+            anc = blk.anchor_grid_batch(padded, stride)
+            oi = np.flatnonzero(ogrid.reshape(-1)).astype(np.int64)  # already batch-global
+            ov = padded.reshape(-1)[oi]
+            buf = self._pack_interp(base_hdr, cgrid=cgrid, anc=anc, oi=oi, ov=ov,
+                                    stride=stride, splines=splines, schemes=schemes,
+                                    pipeline_override=pipe_override)
+        if ckey is not None and cached is None:
+            plan = self.last_plan if sp.predictor == "auto" else None
+            self.plan_cache.put(ckey, {
+                "stride": int(stride), "splines": tuple(splines), "schemes": tuple(schemes),
+                "plan": None if plan is None else plan.to_header(),
+                # pipeline recorded only when the orchestrator chose it —
+                # a fixed pipeline needs no replay
+                "pipeline": self._telemetry().get("pipeline") if sp.pipeline == "auto" else None,
+            })
+        return buf
 
     def _compress_lorenzo(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
         xb, spatial = self._spatial_view(x)

@@ -450,6 +450,12 @@ def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
 
     from .errors import ContainerError
 
+    # per-call telemetry is thread-local: each worker's decompress records
+    # into its own thread state, so worker-side fallbacks are collected
+    # explicitly and merged into the caller's record after the join
+    # (list.append/extend are atomic under the GIL — no lock needed)
+    worker_fallbacks: list = []
+
     def _one(i: int):
         p = payloads.get(i)
         if p is None:
@@ -464,6 +470,10 @@ def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
             report.add("decode", -1, index=i, detail=repr(e))
             report.frames_damaged += 1
             return None
+        finally:
+            tel = comp.last_telemetry
+            if tel and tel.get("fallbacks"):
+                worker_fallbacks.extend(tel["fallbacks"])
 
     hold, comp._telemetry_hold = comp._telemetry_hold, True
     if not hold:
@@ -473,6 +483,8 @@ def shard_decompress(buf, frames_sel=None, *, workers: int | None = None,
             raw = list(ex.map(_one, idx))
     finally:
         comp._telemetry_hold = hold
+    if worker_fallbacks:
+        comp._telemetry()["fallbacks"].extend(worker_fallbacks)
     mask = [p is not None for p in raw]
     parts = []
     for i, p in zip(idx, raw):

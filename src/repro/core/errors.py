@@ -45,6 +45,30 @@ class CheckpointDamageError(RuntimeError):
     """A checkpoint leaf failed its integrity check under ``strict=True``."""
 
 
+class ServiceError(RuntimeError):
+    """Base for compression-service (repro.launch.compressd) failures.
+
+    The daemon maps these onto typed error responses; the client maps the
+    responses back, so a caller catches the same class on either side of
+    the socket."""
+
+
+class ServiceOverloadedError(ServiceError):
+    """Load shed: the daemon's admission queue is at its depth cap (or the
+    request cannot be admitted within the configured wait). Back off and
+    retry; the request was never processed."""
+
+
+class RequestTooLargeError(ServiceError):
+    """The request payload exceeds the daemon's per-request byte cap. The
+    payload was drained, never buffered — split the field or raise the
+    server's ``max_request_bytes``."""
+
+
+class ServiceProtocolError(ServiceError):
+    """Malformed request/response framing (bad magic, header, or lengths)."""
+
+
 @dataclasses.dataclass
 class DamageRecord:
     """One damaged region: what kind, where, and which frame (when known)."""

@@ -1,0 +1,108 @@
+"""Thread-safe LRU cache for autotuned compression plans.
+
+The heavy-traffic case (``repro.launch.compressd``, the checkpoint saver,
+KV-cache paging) is the *same tensor shapes arriving forever*: every
+checkpoint step writes the same parameter geometry, every KV page has the
+layer's fixed (heads, seq, dim) shape. Re-running the predictor planner
+(:func:`repro.core.autotune.autotune_plan`) and the lossless orchestrator
+per call burns most of the request latency on work whose answer never
+changes. A :class:`PlanCache` memoizes the tuning outcome — the
+``(anchor_stride, splines, schemes)`` step tables plus the orchestrator's
+pipeline choice — keyed by :func:`repro.core.autotune.plan_signature`
+(shape, dtype, error-bound config, coarse stats bucket), so a recurring
+field signature skips straight to the predictor.
+
+The cache is an *opt-in* handed to :class:`repro.core.Compressor`
+(``Compressor(spec, plan_cache=cache)``); the default remains uncached,
+so single-shot callers and the bit-identity acceptance tests are
+untouched. One cache may be shared by many compressors across many
+threads: every operation takes the internal lock, and entries are plain
+immutable-ish dicts produced and consumed by the compressor.
+
+Telemetry: ``hits`` / ``misses`` / ``evictions`` counters and
+:meth:`stats` (which adds ``hit_rate``) are how the service's ``stats``
+request and the bench assert — not just time — that recurring shapes
+skip re-autotuning.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+
+class PlanCache:
+    """Bounded LRU mapping plan signatures to tuning outcomes.
+
+    ``max_entries`` bounds memory: one entry is a few hundred bytes of
+    step-table labels, so even thousands of entries are cheap — the bound
+    exists to keep pathological signature churn (e.g. hashing continuous
+    stats without bucketing) from growing without limit.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        if int(max_entries) < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = int(max_entries)
+        self._lock = threading.Lock()
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        """Entry for ``key`` (refreshing its LRU position) or ``None``.
+
+        Counts a hit or a miss; use :meth:`peek` for a count-free probe.
+        """
+        with self._lock:
+            try:
+                value = self._entries[key]
+            except KeyError:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return value
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+            self._entries[key] = value
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+
+    def peek(self, key):
+        """Like :meth:`get` but without touching LRU order or counters."""
+        with self._lock:
+            return self._entries.get(key)
+
+    def keys(self) -> list:
+        """Current keys, least-recently-used first (snapshot)."""
+        with self._lock:
+            return list(self._entries.keys())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def stats(self) -> dict:
+        with self._lock:
+            looked = self.hits + self.misses
+            return {
+                "entries": len(self._entries),
+                "max_entries": self.max_entries,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": (self.hits / looked) if looked else 0.0,
+            }

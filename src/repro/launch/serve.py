@@ -23,7 +23,7 @@ from repro.configs import get_config
 from repro.models import decode_step, init_params, prefill
 
 
-def _kv_roundtrip(cache, eb: float):
+def _kv_roundtrip(cache, eb: float, compressd: str | None = None):
     """Offload+restore the float cache leaves as one v3 frame stream.
 
     Offload is *incremental*: each cache leaf (a layer's K or V tensor)
@@ -36,12 +36,24 @@ def _kv_roundtrip(cache, eb: float):
     back any single layer. Non-float or tiny leaves pass through untouched
     (they are index/position bookkeeping, not KV data).
 
+    With ``compressd`` set (a daemon address, see
+    :mod:`repro.launch.compressd`) the per-leaf compress/decompress runs on
+    the shared daemon instead of in-process — KV layers all share a handful
+    of shapes, so after the first layer every encode is a plan-cache hit,
+    and many serve replicas can share one daemon's cache. The frame-stream
+    format on disk is identical either way.
+
     Returns (restored cache, stats dict).
     """
     import io
 
     from repro.core import Compressor, FrameReader, FrameWriter, cusz_hi_auto
 
+    client = None
+    if compressd:
+        from repro.launch.compressd import CompressdClient
+
+        client = CompressdClient(compressd, stream="serve-kv")
     comp = cusz_hi_auto(eb=eb, autotune=False)
     stats = {"raw_bytes": 0, "comp_bytes": 0, "frames": 0, "pipelines": {}}
     leaves, treedef = jax.tree.flatten(cache)
@@ -56,7 +68,13 @@ def _kv_roundtrip(cache, eb: float):
             arr = np.asarray(leaf)
             if not jnp.issubdtype(leaf.dtype, jnp.floating) or arr.size < 4096:
                 continue
-            buf = comp.compress(arr.astype(np.float32))
+            field = arr.astype(np.float32)
+            if client is not None:
+                buf = client.compress(field, eb=eb, pipeline="auto", autotune=False)
+                if (client.last_info or {}).get("plan_cache") == "hit":
+                    stats["plan_cache_hits"] = stats.get("plan_cache_hits", 0) + 1
+            else:
+                buf = comp.compress(field)
             writer.write_frame(buf)
             framed.append(i)
             picked = Compressor.inspect(buf).get("pipeline", "?")
@@ -74,12 +92,17 @@ def _kv_roundtrip(cache, eb: float):
         by_frame = dict(enumerate(framed))
         for k, frame in reader.iter_frames(on_error="skip"):
             i = by_frame[k]
-            # decompress straight onto device: the decode twins keep the
-            # stream resident, so the restored page never bounces via host
-            out = comp.decompress(frame, out="device").reshape(leaves[i].shape)
+            if client is not None:
+                out = client.decompress(frame).reshape(leaves[i].shape)
+            else:
+                # decompress straight onto device: the decode twins keep the
+                # stream resident, so the restored page never bounces via host
+                out = comp.decompress(frame, out="device").reshape(leaves[i].shape)
             leaves[i] = out.astype(leaves[i].dtype)
         if not reader.damage.ok:
             stats["damage"] = reader.damage.summary()
+    if client is not None:
+        client.close()
     cache = jax.tree.unflatten(treedef, leaves)
     stats["cr"] = stats["raw_bytes"] / max(stats["comp_bytes"], 1)
     return cache, stats
@@ -97,6 +120,9 @@ def main(argv=None):
                     help="offload/restore the prefill KV cache through pipeline='auto'")
     ap.add_argument("--kv-eb", type=float, default=1e-3,
                     help="value-range-relative error bound for --kv-compress")
+    ap.add_argument("--compressd", default=None, metavar="ADDR",
+                    help="route --kv-compress through a compressd daemon at "
+                         "ADDR (host:port or unix:/path) instead of in-process")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -118,11 +144,13 @@ def main(argv=None):
 
     if args.kv_compress:
         t0 = time.time()
-        cache, kv = _kv_roundtrip(cache, args.kv_eb)
+        cache, kv = _kv_roundtrip(cache, args.kv_eb, compressd=args.compressd)
+        via = f" via compressd {args.compressd} ({kv.get('plan_cache_hits', 0)} plan-cache hits)" \
+            if args.compressd else ""
         print(
             f"kv-cache offload: {kv['raw_bytes']/2**20:.1f} MiB -> {kv['comp_bytes']/2**20:.1f} MiB "
             f"in {kv['frames']} layer-frames (CR {kv['cr']:.2f}, eb={args.kv_eb:g} rel, "
-            f"pipelines {kv['pipelines']}, {time.time()-t0:.2f}s roundtrip)"
+            f"pipelines {kv['pipelines']}, {time.time()-t0:.2f}s roundtrip){via}"
         )
 
     dstep = jax.jit(lambda p, c, t, i: decode_step(p, cfg, t, i, c), donate_argnums=(1,))

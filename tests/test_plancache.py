@@ -1,0 +1,216 @@
+"""Plan cache: LRU mechanics, field signatures, and Compressor integration.
+
+Covers the contract the compressd daemon leans on: recurring field
+signatures skip both tuners (predictor plan + orchestrator pipeline
+choice) and replay the recorded outcome to an equivalent container, while
+distinct shapes/dtypes/bounds/spec-knobs never collide.
+"""
+import numpy as np
+import pytest
+
+import repro.core.compressor as compressor_mod
+from repro.core import Compressor, CompressorSpec, PlanCache, plan_signature, stats_bucket
+from repro.core.autotune import PredictorPlan
+
+
+def _field(seed=0, n=24):
+    g = np.linspace(0, 4 * np.pi, n)
+    X, Y, Z = np.meshgrid(g, g, g, indexing="ij")
+    rng = np.random.default_rng(seed)
+    return (np.sin(X + seed) * np.cos(Y) * np.sin(Z)
+            + 0.01 * rng.standard_normal(X.shape)).astype(np.float32)
+
+
+# --------------------------------------------------------------- unit: LRU
+def test_lru_hit_miss_eviction_counters():
+    c = PlanCache(max_entries=2)
+    assert c.get("a") is None  # miss
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1 and c.get("b") == 2  # hits
+    c.put("c", 3)  # evicts LRU ("a": it was refreshed, then "b"... order: get(a), get(b) -> a is LRU)
+    assert "a" not in c and c.get("c") == 3
+    st = c.stats()
+    assert st["entries"] == 2 and st["max_entries"] == 2
+    assert st["misses"] == 1 and st["hits"] == 3 and st["evictions"] == 1
+    assert st["hit_rate"] == pytest.approx(3 / 4)
+
+
+def test_lru_recency_refresh_on_hit():
+    c = PlanCache(max_entries=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    c.get("a")      # refresh "a"; "b" becomes LRU
+    c.put("c", 3)
+    assert "a" in c and "b" not in c and "c" in c
+
+
+def test_lru_put_overwrites_and_peek_keeps_counters():
+    c = PlanCache(max_entries=4)
+    c.put("k", "old")
+    c.put("k", "new")
+    assert len(c) == 1 and c.peek("k") == "new"
+    assert c.stats()["hits"] == 0 and c.stats()["misses"] == 0  # peek is silent
+    c.clear()
+    assert len(c) == 0 and c.peek("k") is None
+
+
+def test_lru_capacity_one_thrashes():
+    c = PlanCache(max_entries=1)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") is None and c.get("b") == 2
+    assert c.stats()["evictions"] == 1
+
+
+# --------------------------------------------------------- unit: signatures
+def test_plan_signature_distinguishes_every_axis():
+    base = dict(shape=(32, 32), dtype=np.float32, eb=1e-3, eb_mode="rel")
+
+    def sig(**over):
+        kw = dict(base, **over)
+        bucket = kw.pop("bucket", (0, 0))
+        extra = kw.pop("extra", ())
+        return plan_signature(kw["shape"], kw["dtype"], kw["eb"], kw["eb_mode"],
+                              bucket, extra=extra)
+
+    ref = sig()
+    assert sig() == ref  # deterministic
+    assert sig(shape=(32, 33)) != ref
+    assert sig(dtype=np.float64) != ref
+    assert sig(eb=1e-4) != ref
+    assert sig(eb_mode="abs") != ref
+    assert sig(bucket=(1, 0)) != ref
+    assert sig(extra=("interp",)) != ref
+
+
+def test_plan_signature_is_hashable_and_serial_stable():
+    s = plan_signature((8, 8), "float32", 1e-3, "rel", (2, -1), extra=("auto", 4))
+    assert hash(s) == hash(plan_signature((8, 8), np.float32, 1e-3, "rel", (2, -1),
+                                          extra=("auto", 4)))
+    {s: 1}  # usable as a dict key
+
+
+def test_stats_bucket_behaviour():
+    x = _field(0)
+    assert stats_bucket(x) == stats_bucket(x.copy())
+    # scaling the value range by 2**8 moves the range-exponent bucket but
+    # keeps the (range-normalized) spread bucket
+    b0, b1 = stats_bucket(x), stats_bucket(x * 256.0)
+    assert b1[0] == b0[0] + 8 and b1[1] == b0[1]
+    # degenerate fields get sentinel buckets, not crashes
+    assert stats_bucket(np.zeros(64, np.float32))[0] < -1000
+    assert stats_bucket(np.full(64, np.nan, np.float32))[0] < -1000
+    assert stats_bucket(np.full(64, 3.0, np.float32))[0] < -1000
+
+
+def test_predictor_plan_bytes_roundtrip():
+    hdr = {"ndim": 3, "anchor_stride": 4, "splines": ["cubic", "cubic"],
+           "schemes": ["md", "md"]}
+    plan = PredictorPlan.from_header(hdr)
+    again = PredictorPlan.from_bytes(plan.to_bytes())
+    assert again.to_header() == plan.to_header()
+
+
+# ----------------------------------------------------- Compressor integration
+@pytest.fixture
+def counting_tuners(monkeypatch):
+    """Count invocations of both tuners without changing their behavior."""
+    calls = {"plan": 0, "autotune": 0}
+    real_plan, real_tune = compressor_mod.autotune_plan, compressor_mod.autotune
+
+    def plan_wrap(*a, **kw):
+        calls["plan"] += 1
+        return real_plan(*a, **kw)
+
+    def tune_wrap(*a, **kw):
+        calls["autotune"] += 1
+        return real_tune(*a, **kw)
+
+    monkeypatch.setattr(compressor_mod, "autotune_plan", plan_wrap)
+    monkeypatch.setattr(compressor_mod, "autotune", tune_wrap)
+    return calls
+
+
+def test_cache_skips_plan_tuner_and_replays(counting_tuners):
+    x = _field(0)
+    cache = PlanCache(max_entries=8)
+    comp = Compressor(CompressorSpec(eb=1e-3, predictor="auto", pipeline="auto"),
+                      plan_cache=cache)
+    b1 = comp.compress(x)
+    assert comp.last_telemetry["plan_cache"] == "miss"
+    assert counting_tuners["plan"] == 1
+    pipe1 = comp.last_telemetry["pipeline"]
+
+    b2 = comp.compress(x)
+    assert comp.last_telemetry["plan_cache"] == "hit"
+    assert counting_tuners["plan"] == 1  # tuner NOT re-run
+    assert comp.last_telemetry["pipeline"] == pipe1  # orchestrator choice replayed
+    assert Compressor.inspect(b2).get("pcached") is True
+    assert Compressor.inspect(b1).get("pcached") is None
+    # the replayed container decodes bit-identically to the tuned one
+    assert np.array_equal(comp.decompress(b1), comp.decompress(b2))
+    y = comp.decompress(b2)
+    assert np.max(np.abs(x - y)) <= 1e-3 * (x.max() - x.min()) * (1 + 1e-5)
+    assert cache.stats() == {"entries": 1, "max_entries": 8, "hits": 1, "misses": 1,
+                             "evictions": 0, "hit_rate": 0.5}
+
+
+def test_cache_skips_spline_tuner_for_interp_autotune(counting_tuners):
+    x = _field(1)
+    comp = Compressor(CompressorSpec(eb=1e-3, predictor="interp", autotune=True),
+                      plan_cache=PlanCache(4))
+    comp.compress(x)
+    comp.compress(x)
+    assert counting_tuners["autotune"] == 1
+    assert comp.last_telemetry["plan_cache"] == "hit"
+
+
+def test_distinct_fields_do_not_collide(counting_tuners):
+    cache = PlanCache(max_entries=8)
+    comp = Compressor(CompressorSpec(eb=1e-3, predictor="auto", pipeline="auto"),
+                      plan_cache=cache)
+    comp.compress(_field(0))
+    comp.compress(_field(0, n=20))          # different shape
+    comp.compress(_field(0) * 1e4)          # different stats bucket
+    assert counting_tuners["plan"] == 3
+    assert cache.stats()["hits"] == 0 and len(cache) == 3
+    # spec knobs partition too: same field, different eb
+    comp2 = Compressor(CompressorSpec(eb=1e-2, predictor="auto", pipeline="auto"),
+                       plan_cache=cache)
+    comp2.compress(_field(0))
+    assert counting_tuners["plan"] == 4 and len(cache) == 4
+
+
+def test_shared_cache_across_compressors(counting_tuners):
+    cache = PlanCache(max_entries=8)
+    spec = CompressorSpec(eb=1e-3, predictor="auto", pipeline="auto")
+    Compressor(spec, plan_cache=cache).compress(_field(0))
+    Compressor(spec, plan_cache=cache).compress(_field(0))  # fresh instance, same cache
+    assert counting_tuners["plan"] == 1
+    assert cache.stats()["hits"] == 1
+
+
+def test_eviction_pressure_retunes(counting_tuners):
+    cache = PlanCache(max_entries=1)
+    comp = Compressor(CompressorSpec(eb=1e-3, predictor="auto", pipeline="auto"),
+                      plan_cache=cache)
+    a, b = _field(0), _field(0, n=20)
+    comp.compress(a)
+    comp.compress(b)   # evicts a
+    comp.compress(a)   # must re-tune
+    assert counting_tuners["plan"] == 3
+    assert cache.stats()["evictions"] >= 2
+
+
+def test_no_cache_means_no_telemetry_key_and_fixed_spec_uncacheable():
+    x = _field(0)
+    comp = Compressor(CompressorSpec(eb=1e-3))  # no plan_cache attached
+    comp.compress(x)
+    assert "plan_cache" not in comp.last_telemetry
+    # fully fixed spec: nothing tunable, cache stays empty even when attached
+    cache = PlanCache(4)
+    fixed = Compressor(CompressorSpec(eb=1e-3, predictor="interp", autotune=False,
+                                      pipeline="tp"), plan_cache=cache)
+    fixed.compress(x)
+    assert "plan_cache" not in fixed.last_telemetry and len(cache) == 0
