@@ -54,8 +54,9 @@ def _make_fields(shapes) -> list[np.ndarray]:
     return fields
 
 
-def _spec(eb: float) -> dict:
-    return {"eb": eb, "predictor": "auto", "pipeline": "auto"}
+def _spec(eb: float) -> str:
+    # canonical spec-string grammar (CompressorSpec.from_string)
+    return f"lossy,rel,{eb:g},predictor=auto,pipeline=auto"
 
 
 def _percentiles(ms: list[float]) -> dict:
@@ -70,7 +71,7 @@ def run(addr: str, fields, *, clients: int, requests: int, eb: float) -> dict:
     containers = {}
     with CompressdClient(addr, stream="bench-warmup") as c:
         for i, x in enumerate(fields):
-            containers[i] = c.compress(x, **_spec(eb))
+            containers[i] = c.compress(x, spec=_spec(eb))
             c.decompress(containers[i])
 
     comp_lat: list[float] = []
@@ -89,7 +90,7 @@ def run(addr: str, fields, *, clients: int, requests: int, eb: float) -> dict:
                 for j in range(requests):
                     x = fields[(k + j) % len(fields)]
                     t0 = time.perf_counter()
-                    buf = c.compress(x, **_spec(eb))
+                    buf = c.compress(x, spec=_spec(eb))
                     dt_c = time.perf_counter() - t0
                     info = dict(c.last_info or {})
                     t0 = time.perf_counter()

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import Compressor, CompressorSpec, compression_ratio, cusz_hi_cr, max_abs_err
 from repro.core.autotune import fixed_step_baselines
+from repro.core.metrics import max_rel_err, psnr, quality_report, value_range
 from repro.core.lossless import bitshuffle as bs
 from repro.core.lossless import huffman as hf
 from repro.core.lossless import orchestrate as orc
@@ -252,6 +253,72 @@ def sweep_pipelines(data: np.ndarray, stream: str, reps: int,
     return rows
 
 
+# The real-fixture spec grid: one abs-mode point (the paper's classic
+# regime), the point-wise-relative mode, and the PSNR-target mode — all
+# as canonical spec strings, so the bench exercises the same entry point
+# (CompressorSpec.from_string) every other consumer uses.
+REAL_SPECS = (
+    "lossy,rel,1e-3,pipeline=cr,autotune=false",
+    "lossy,pw_rel,1e-2,pipeline=cr,autotune=false",
+    "lossy,psnr,60,pipeline=cr,autotune=false",
+)
+
+
+def sweep_real_fields(reps: int, smoke: bool, with_metrics: bool) -> list[dict]:
+    """The real-field fixture lane: weather/CFD-like structured grids
+    (repro.data.realfields, the committed tests/data npz when present)
+    swept over the spec-string grid above. Every row verifies its error
+    contract before timing — abs bound ≤ header eb, pw_rel max relative
+    error ≤ eb, achieved PSNR within 1 dB of target — and (with
+    ``--metrics``) carries the full quality_report columns the CI io lane
+    gates on."""
+    from repro.data import load_real_fields
+
+    rows = []
+    for name, field in sorted(load_real_fields().items()):
+        if smoke:  # crop, don't subsample: keep the spatial structure
+            field = field[tuple(slice(0, min(s, 48 if field.ndim == 2 else 32))
+                                for s in field.shape)]
+        x = np.ascontiguousarray(field, np.float32)
+        rng = value_range(x)
+        for spec_str in REAL_SPECS:
+            spec = CompressorSpec.from_string(spec_str)
+            comp = Compressor(spec)
+            buf = comp.compress(x)
+            search = (comp.last_telemetry or {}).get("psnr_search")
+            y = comp.decompress(buf)
+            hdr = Compressor.inspect(buf)
+            row = {
+                "stage": f"real:{name}", "stream": name, "fixture": "real",
+                "spec": spec_str, "value_range": rng, "cr": compression_ratio(x, buf),
+            }
+            if spec.eb_mode == "pw_rel":
+                mre = max_rel_err(x, y)
+                assert mre <= spec.eb, (name, spec_str, mre)
+                row["eb_rel"] = spec.eb
+                row["max_rel_err_vs_eb"] = mre / spec.eb
+            else:
+                eb_abs = float(hdr["eb_abs"])
+                assert max_abs_err(x, y) <= eb_abs * (1 + 1e-4) + 1e-9, (name, spec_str)
+                row["eb_abs"] = eb_abs
+                if eb_abs > 0:  # the header-implied PSNR floor the gate asserts
+                    row["psnr_floor"] = 20.0 * np.log10(rng / eb_abs)
+            if spec.psnr_target is not None:
+                achieved = psnr(x, y)
+                assert achieved >= spec.psnr_target - 1.0, (name, achieved)
+                row["psnr_target"] = spec.psnr_target
+                if search:
+                    row["psnr_search_trials"] = search["trials"]
+            if with_metrics:
+                row.update(quality_report(x, y, buf))
+            te = _best(lambda: comp.compress(x), reps)
+            td = _best(lambda: comp.decompress(buf), reps)
+            row["enc_mbps"] = x.nbytes / te / 1e6
+            row["dec_mbps"] = x.nbytes / td / 1e6
+            rows.append(row)
+    return rows
+
+
 def sweep_sharded(devices: int, side: int, reps: int, eb: float = 1e-3) -> list[dict]:
     """Device-parallel shard_compress vs the host-sequential chunked writer
     on an (devices, side^3) field; one row per writer, pipeline=cr."""
@@ -285,8 +352,21 @@ def sweep_sharded(devices: int, side: int, reps: int, eb: float = 1e-3) -> list[
 
 
 def run(reps: int = 5, smoke: bool = False, devices: int = 1,
-        engines: tuple = ("numpy", "device")) -> dict:
+        engines: tuple = ("numpy", "device"), fixture: str = "synthetic",
+        with_metrics: bool = False) -> dict:
     stream_bytes = SMOKE_STREAM_BYTES if smoke else STREAM_BYTES
+    if fixture == "real":
+        # the quality lane: real-field fixtures only, spec-string grid,
+        # metric columns — a separate JSON shape from the hot-path grid
+        return {
+            "bench": "real_fields",
+            "smoke": bool(smoke),
+            "fixture": "real",
+            "metrics": bool(with_metrics),
+            "specs": list(REAL_SPECS),
+            "timing": f"best of {reps} reps after warmup",
+            "stages": sweep_real_fields(reps, smoke, with_metrics),
+        }
     field_side = SMOKE_FIELD_SIDE if smoke else FIELD_SIDE
     pred_side = SMOKE_FIELD_SIDE if smoke else PRED_FIELD_SIDE
     data = quant_code_stream(stream_bytes)
@@ -383,6 +463,12 @@ def main(argv=None):
                     help="comma-separated lossless-engine dimension to sweep "
                          "over the stage benches (numpy = reference host "
                          "stages, device = jit/Pallas engine)")
+    ap.add_argument("--fixture", default="synthetic", choices=("synthetic", "real"),
+                    help="real = the weather/CFD fixture lane (spec-string "
+                         "grid incl. pw_rel + psnr_target, quality columns)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="record quality_report columns (psnr/ssim/spectral "
+                         "error/...) on every real-fixture row")
     args = ap.parse_args(argv)
     engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
     for e in engines:
@@ -405,18 +491,23 @@ def main(argv=None):
                                       + inherited))
         return subprocess.run([sys.executable, os.path.abspath(__file__)]
                               + (argv if argv is not None else sys.argv[1:]), env=env).returncode
-    result = run(args.reps, smoke=args.smoke, devices=args.devices, engines=engines)
+    result = run(args.reps, smoke=args.smoke, devices=args.devices, engines=engines,
+                 fixture=args.fixture, with_metrics=args.metrics)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for r in result["stages"]:
-        tag = r["stage"] + (f"[{r['stream']}]" if "stream" in r else "")
+        tag = r["stage"] + (f"[{r['stream']}]" if "stream" in r and "fixture" not in r else "")
         if "engine" in r:
             tag += f"({r['engine']})"
+        if "spec" in r:
+            tag += f"[{r['spec'].split(',pipeline')[0]}]"
         picked = f"  -> {r['picked']}" if "picked" in r else ""
         if "plan" in r:
             picked = f"  -> {r['plan']}  (x{r['cr_vs_best_fixed']:.3f} vs best fixed)"
+        if "psnr" in r:
+            picked += f"  PSNR {r['psnr']:6.2f} dB  SSIM {r['ssim']:.4f}  spec_err {r['spectral_error']:.4f}"
         print(
-            f"{tag:28s} enc {r['enc_mbps']:8.1f} MB/s   dec {r['dec_mbps']:8.1f} MB/s   CR {r['cr']:8.2f}{picked}"
+            f"{tag:44s} enc {r['enc_mbps']:8.1f} MB/s   dec {r['dec_mbps']:8.1f} MB/s   CR {r['cr']:8.2f}{picked}"
         )
     print(f"-> {args.out}")
     return 0

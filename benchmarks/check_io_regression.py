@@ -1,0 +1,96 @@
+"""Quality gate for the CI io lane (real-field fixture bench).
+
+    PYTHONPATH=src python -m benchmarks.check_io_regression \
+        --baseline BENCH_io_smoke.json --fresh bench_io_smoke.json
+
+Checks every (field, spec) cell of a fresh ``bench_lossless --fixture
+real --metrics`` JSON two ways:
+
+* **absolute quality contracts** on the fresh run alone — PSNR at or
+  above the header-implied floor ``20*log10(range/eb_abs)`` (an abs
+  bound of eb_abs caps MSE at eb_abs^2, so falling below the floor means
+  the bound itself broke), achieved PSNR within ``--psnr-slack`` dB of
+  ``psnr_target`` on target rows, and ``max_rel_err <= eb`` on pw_rel
+  rows;
+* **relative regression** against the committed baseline — compression
+  ratio within ``--max-drop-pct`` of the baseline cell, and no baseline
+  cell missing from the fresh run.
+
+Timing columns are ignored (machine-dependent); the fixtures are the
+committed seeded npz, so CR and the quality columns are deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def cells(doc: dict) -> dict:
+    out = {}
+    for row in doc.get("stages", []):
+        if row.get("fixture") == "real":
+            out[(row["stream"], row["spec"])] = row
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-drop-pct", type=float, default=5.0,
+                    help="max CR drop vs the baseline cell")
+    ap.add_argument("--psnr-slack", type=float, default=1.0,
+                    help="max dB below psnr_target an achieved PSNR may land")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    for field in ("smoke", "fixture"):
+        if base.get(field) != fresh.get(field):
+            print(f"GRID MISMATCH: {field} baseline={base.get(field)} "
+                  f"fresh={fresh.get(field)} (the gate only compares like-for-like runs)")
+            return 1
+    bcells, fcells = cells(base), cells(fresh)
+    floor = 1.0 - args.max_drop_pct / 100.0
+    failures = []
+    for key, row in sorted(fcells.items()):
+        tag = f"{key[0]} [{key[1]}]"
+        if "psnr_floor" in row and "psnr" in row:
+            if row["psnr"] < row["psnr_floor"]:
+                failures.append(f"{tag}: PSNR {row['psnr']:.2f} dB below header-implied "
+                                f"floor {row['psnr_floor']:.2f} dB")
+        if "psnr_target" in row and "psnr" in row:
+            if row["psnr"] < row["psnr_target"] - args.psnr_slack:
+                failures.append(f"{tag}: PSNR {row['psnr']:.2f} dB missed target "
+                                f"{row['psnr_target']:.1f} dB by more than {args.psnr_slack:g}")
+        if "eb_rel" in row and "max_rel_err" in row:
+            if row["max_rel_err"] > row["eb_rel"]:
+                failures.append(f"{tag}: max_rel_err {row['max_rel_err']:.3e} "
+                                f"exceeds pw_rel eb {row['eb_rel']:.3e}")
+    compared = 0
+    for key, brow in sorted(bcells.items()):
+        tag = f"{key[0]} [{key[1]}]"
+        if key not in fcells:
+            failures.append(f"{tag}: cell missing from fresh run (was CR {brow['cr']:.3f})")
+            continue
+        compared += 1
+        fcr = fcells[key]["cr"]
+        if fcr < brow["cr"] * floor:
+            failures.append(f"{tag}: CR {brow['cr']:.3f} -> {fcr:.3f} "
+                            f"({(fcr / brow['cr'] - 1) * 100:+.2f}%)")
+    print(f"io gate: {len(fcells)} cells quality-checked, {compared} compared "
+          f"against baseline (CR tolerance {args.max_drop_pct:g}%, "
+          f"PSNR slack {args.psnr_slack:g} dB)")
+    if failures:
+        print("FAILURES:")
+        for f_ in failures:
+            print(" ", f_)
+        return 1
+    print("(timing columns ignored by design)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

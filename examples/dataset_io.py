@@ -1,0 +1,60 @@
+"""Dataset I/O walkthrough: the ``repro.io`` facade end to end.
+
+A small two-variable "weather" dataset (temperature in Kelvin, specific
+humidity — the strictly-positive field where a point-wise relative bound
+is the scientifically meaningful one) is written as one chunked
+container-v3 file. Each variable gets its own compression spec in the
+canonical spec-string grammar (``CompressorSpec.from_string``):
+
+* ``t2m``  — absolute bound, 0.05 K;
+* ``q``    — ``pw_rel``: every point reconstructs within 1% of its own
+  magnitude, signs and exact zeros preserved;
+
+then the file is read back three ways — full dataset, one variable, and
+one *chunk* of one variable by random access (only that frame's bytes
+are touched) — and per-variable quality is reported with the metrics the
+paper evaluates on: PSNR, SSIM, spectral error.
+
+    PYTHONPATH=src python examples/dataset_io.py
+"""
+import os
+import tempfile
+
+import repro.io as rio
+from repro.core import quality_report
+from repro.data import load_real_fields
+
+fields = load_real_fields()
+ds = rio.Dataset(attrs={"title": "weather demo", "source": "repro.data.realfields"})
+ds["t2m"] = rio.Variable(fields["temperature"], ("lat", "lon"), {"units": "K"})
+ds["q"] = rio.Variable(fields["humidity"], ("lat", "lon"), {"units": "kg/kg"})
+
+path = os.path.join(tempfile.mkdtemp(), "weather.cszh3")
+manifest = rio.write(
+    ds, path,
+    compression={
+        "t2m": "lossy,abs,0.05,predictor=auto",
+        "q": "lossy,pw_rel,1e-2,predictor=auto",
+    },
+    chunks=(48, 64),  # 2x2 chunk grid per variable, one v3 frame each
+)
+raw = sum(v.data.nbytes for v in ds.variables.values())
+print(f"wrote {path}: {raw} raw bytes -> {manifest['bytes_written']} "
+      f"(CR {raw / manifest['bytes_written']:.2f})")
+for v in manifest["variables"]:
+    print(f"  {v['name']}{tuple(v['shape'])} spec={v['spec']!r} "
+          f"chunks={v['n_chunks']}")
+
+# ---- read back: whole dataset, then one chunk by random access
+back = rio.read(path)
+corner = rio.read_variable(path, "t2m", chunks=(0, 0))  # top-left 48x64 block
+assert corner.shape == (48, 64)
+print(f"random access: t2m chunk (0,0) -> {corner.shape}, "
+      f"decoded without touching the other {manifest['variables'][0]['n_chunks'] - 1} frames")
+
+# ---- per-variable quality, the paper's evaluation metrics
+for name in ds:
+    rep = quality_report(ds[name].data, back[name].data)
+    print(f"{name}: PSNR {rep['psnr']:.1f} dB  SSIM {rep['ssim']:.4f}  "
+          f"spectral_err {rep['spectral_error']:.4f}  "
+          f"max_rel_err {rep['max_rel_err']:.2e}")

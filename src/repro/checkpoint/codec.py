@@ -70,11 +70,34 @@ def _as_field(x: np.ndarray) -> np.ndarray:
     return flat.reshape(-1, w) if w > 1 else flat.reshape(1, -1)
 
 
-def _eb_compressor(eb: float) -> Compressor:
-    # portable candidates only: a checkpoint must restore on machines
-    # without the optional codecs installed here (e.g. zstandard)
-    return Compressor(CompressorSpec(eb=eb, predictor="auto", pipeline=_EB_PIPELINE,
-                                     pipeline_candidates=tuple(portable_pipelines())))
+def default_ckpt_spec(eb: float) -> str:
+    """The canonical spec string the checkpoint codec compresses with at a
+    given bound: plan-driven predictor, orchestrated pipeline, portable
+    candidates only — a checkpoint must restore on machines without the
+    optional codecs installed here (e.g. zstandard)."""
+    cands = ":".join(portable_pipelines())
+    return (f"lossy,rel,{eb:g},predictor=auto,pipeline={_EB_PIPELINE},"
+            f"pipeline_candidates={cands}")
+
+
+def _resolve_spec(eb: float, spec) -> CompressorSpec | None:
+    """The error-bounded spec for this tensor, or ``None`` for lossless.
+
+    Precedence: explicit ``spec=`` (spec string or CompressorSpec — also
+    opts a tensor into error-bounded encoding on its own) > the
+    ``REPRO_CKPT_SPEC`` env var (overrides *how* tensors already selected
+    via ``eb > 0`` are compressed, never which) > the default built from
+    ``eb``. Spec strings parse through ``CompressorSpec.from_string``."""
+    if spec is not None:
+        if isinstance(spec, str):
+            spec = CompressorSpec.from_string(spec)
+        return spec
+    if eb <= 0:
+        return None
+    env = os.environ.get("REPRO_CKPT_SPEC")
+    if env:
+        return CompressorSpec.from_string(env)
+    return CompressorSpec.from_string(default_ckpt_spec(eb))
 
 
 def _n_frames(field: np.ndarray) -> int:
@@ -101,11 +124,15 @@ class _CountingSink:
             self._f.flush()
 
 
-def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, retry: bool = True,
+def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, spec=None, retry: bool = True,
                      compressd: str | None = None) -> dict:
     """Encode ``x`` into file-like ``f``; returns the manifest meta (with
     ``bytes`` and a whole-payload ``crc32``). eb = 0 -> lossless; eb > 0
-    -> value-range-relative bound.
+    -> value-range-relative bound. ``spec`` (a canonical spec string or
+    :class:`~repro.core.CompressorSpec`) selects the full error-bounded
+    configuration instead — the ``REPRO_CKPT_SPEC`` env var does the same
+    for every ``eb > 0`` tensor without touching call sites; the spec
+    string used lands in the manifest meta.
 
     The error-bounded path streams v3 frames into ``f`` as each chunk's
     encode completes (see module docstring) — with per-frame sync markers,
@@ -128,26 +155,27 @@ def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, retry: bool = True,
     rf = RetryingWriter(f) if retry else f
     sink = _CountingSink(rf)
     compressd = compressd or os.environ.get("REPRO_COMPRESSD") or None
-    if eb > 0 and x.dtype in (np.float32, np.float64) and x.size >= 4096:
+    sp = _resolve_spec(eb, spec)
+    if sp is not None and x.dtype in (np.float32, np.float64) and x.size >= 4096:
+        spec_str = sp.to_string()
+        meta_eb = sp.eb if eb <= 0 else eb
         field = _as_field(x.astype(np.float32))
         if compressd:
             from repro.launch.compressd import CompressdClient
 
             with CompressdClient(compressd, stream="checkpoint") as client:
-                buf = client.compress(
-                    field, eb=eb, predictor="auto", pipeline=_EB_PIPELINE,
-                    pipeline_candidates=tuple(portable_pipelines()))
+                buf = client.compress(field, spec=spec_str)
                 info = client.last_info or {}
             sink.write(buf)
-            meta.update(mode="cuszhi", eb=eb, field_shape=list(field.shape),
-                        pipeline=_EB_PIPELINE, predictor="auto",
+            meta.update(mode="cuszhi", eb=meta_eb, field_shape=list(field.shape),
+                        pipeline=sp.pipeline, predictor=sp.predictor, spec=spec_str,
                         bytes=sink.nbytes, crc32=sink.crc32,
                         compressd={"plan_cache": info.get("plan_cache"),
                                    "pipeline": info.get("pipeline")})
             if retry and rf.retries:
                 meta["io_retries"] = rf.retries
             return meta
-        comp = _eb_compressor(eb)
+        comp = Compressor(sp)
         n_frames = _n_frames(field)
         import jax
 
@@ -158,8 +186,9 @@ def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, retry: bool = True,
         else:
             dist.chunk_compress(field, n_chunks=n_frames, compressor=comp, out=sink, sync=True)
         plan = comp.last_plan  # last frame's plan (full per-frame plans ride the container)
-        meta.update(mode="cuszhi3", eb=eb, field_shape=list(field.shape), pipeline=_EB_PIPELINE,
-                    predictor="auto", n_frames=n_frames, bytes=sink.nbytes, crc32=sink.crc32,
+        meta.update(mode="cuszhi3", eb=meta_eb, field_shape=list(field.shape),
+                    pipeline=sp.pipeline, predictor=sp.predictor, spec=spec_str,
+                    n_frames=n_frames, bytes=sink.nbytes, crc32=sink.crc32,
                     plan=None if plan is None else plan.to_header())
         if retry and rf.retries:
             meta["io_retries"] = rf.retries
@@ -178,10 +207,10 @@ def encode_tensor_to(f, x: np.ndarray, *, eb: float = 0.0, retry: bool = True,
     return meta
 
 
-def encode_tensor(x: np.ndarray, *, eb: float = 0.0) -> tuple[bytes, dict]:
+def encode_tensor(x: np.ndarray, *, eb: float = 0.0, spec=None) -> tuple[bytes, dict]:
     """In-memory :func:`encode_tensor_to`: returns ``(payload, meta)``."""
     bio = io.BytesIO()
-    meta = encode_tensor_to(bio, x, eb=eb)
+    meta = encode_tensor_to(bio, x, eb=eb, spec=spec)
     return bio.getvalue(), meta
 
 

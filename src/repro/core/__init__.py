@@ -11,6 +11,7 @@ from .errors import (  # noqa: F401
     ServiceError,
     ServiceOverloadedError,
     ServiceProtocolError,
+    SpecError,
     TruncatedContainerError,
 )
 from .plancache import PlanCache  # noqa: F401
@@ -29,4 +30,13 @@ from .compressor import (  # noqa: F401
     cuszp2_like,
     fzgpu_like,
 )
-from .metrics import bit_rate, compression_ratio, max_abs_err, psnr  # noqa: F401
+from .metrics import (  # noqa: F401
+    bit_rate,
+    compression_ratio,
+    max_abs_err,
+    max_rel_err,
+    psnr,
+    quality_report,
+    spectral_error,
+    ssim,
+)

@@ -75,7 +75,7 @@ import numpy as np
 from . import blocks as blk
 from . import frames as frames_mod
 from . import lorenzo as lor
-from .errors import ContainerError, DamageReport, FrameCRCError
+from .errors import ContainerError, DamageReport, FrameCRCError, SpecError
 from .autotune import (
     DEFAULT_STRIDES,
     PredictorPlan,
@@ -99,8 +99,69 @@ MAGIC_V3 = frames_mod.MAGIC_V3  # chunked frame streams (repro.core.frames)
 _PREDICTORS = ("interp", "auto", "lorenzo", "offset1d")
 _BACKENDS = ("jax", "pallas")
 _ENGINES = ("auto", "numpy", "device")
-_EB_MODES = ("rel", "abs")
+_EB_MODES = ("rel", "abs", "pw_rel")
 _ANCHOR_STRIDES = (4, 8, 16)  # power-of-two strides the 17^ndim block supports
+
+# ---------------------------------------------------------------- spec grammar
+# Canonical compression-spec string grammar (the single spec entry point
+# shared by repro.io, the compressd protocol, `serve --kv-spec`, the
+# checkpoint codec's REPRO_CKPT_SPEC, and the benches):
+#
+#     "lossy" "," <eb_mode> "," <number> { "," key "=" value }
+#     "lossy" "," "psnr"    "," <target_dB> { "," key "=" value }
+#
+# e.g. "lossy,abs,1e-3,predictor=auto" or "lossy,psnr,60,pipeline=cr".
+# Tuple-valued keys join their items with ":" ("splines=cubic:linear"),
+# booleans are "true"/"false". `CompressorSpec.to_string()` emits the
+# canonical form (head + sorted non-default key=value pairs), and
+# `from_string(to_string(spec)) == spec` for every valid spec. The
+# dataset-level "lossless[,...]" form is handled by repro.io (raw-chunk
+# storage); it is not a CompressorSpec.
+_SPEC_TUPLE_FIELDS = {"splines", "schemes", "pipeline_candidates", "plan_anchor_strides"}
+_SPEC_BOOL_FIELDS = {"autotune", "reorder"}
+
+
+def _spec_parse_value(key: str, raw: str):
+    """Parse one ``key=value`` token of the spec grammar into the typed
+    CompressorSpec field value; raises :class:`SpecError` on bad syntax."""
+    if key in _SPEC_BOOL_FIELDS:
+        low = raw.strip().lower()
+        if low in ("true", "1", "yes", "on"):
+            return True
+        if low in ("false", "0", "no", "off"):
+            return False
+        raise SpecError(f"spec key {key!r} expects a boolean, got {raw!r}")
+    if key in _SPEC_TUPLE_FIELDS:
+        items = tuple(t.strip() for t in raw.split(":") if t.strip())
+        if not items:
+            raise SpecError(f"spec key {key!r} expects ':'-joined items, got {raw!r}")
+        if key == "plan_anchor_strides":
+            try:
+                return tuple(int(t) for t in items)
+            except ValueError as e:
+                raise SpecError(f"spec key {key!r} expects integers, got {raw!r}") from e
+        return items
+    if key == "anchor_stride":
+        try:
+            return int(raw)
+        except ValueError as e:
+            raise SpecError(f"spec key {key!r} expects an integer, got {raw!r}") from e
+    if key in ("eb", "psnr_target"):
+        try:
+            return float(raw)
+        except ValueError as e:
+            raise SpecError(f"spec key {key!r} expects a number, got {raw!r}") from e
+    return raw.strip()
+
+
+def _spec_format_value(key: str, value) -> str:
+    if key in _SPEC_BOOL_FIELDS:
+        return "true" if value else "false"
+    if key in _SPEC_TUPLE_FIELDS:
+        return ":".join(str(v) for v in value)
+    if isinstance(value, float):
+        return repr(value)  # shortest round-tripping float repr
+    return str(value)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +189,12 @@ class CompressorSpec:
     pipeline_candidates: tuple | None = None
     # predictor="auto" only: anchor strides the planner explores.
     plan_anchor_strides: tuple = DEFAULT_STRIDES
+    # PSNR-target mode: instead of a fixed bound, binary-search the abs eb
+    # over a sampled trial compress until the reconstruction PSNR lands on
+    # this target (dB). The searched eb_abs is recorded in the container
+    # header like any other, so decode is oblivious. Mutually exclusive
+    # with eb_mode="pw_rel" (the search runs in the abs-bound domain).
+    psnr_target: float | None = None
 
     def __post_init__(self):
         if self.pipeline != "auto" and self.pipeline not in pipelines.PIPELINES:
@@ -156,10 +223,88 @@ class CompressorSpec:
         for s in self.schemes:
             if s != "md" and s != "1d" and not s.startswith("1d-"):
                 raise ValueError(f"unknown scheme {s!r}; 'md', '1d', or '1d-<perm>'")
+        if self.eb_mode == "pw_rel" and not (self.eb > 0):
+            raise ValueError(f"eb_mode='pw_rel' needs eb > 0, got {self.eb}")
+        if self.psnr_target is not None:
+            if not (float(self.psnr_target) > 0) or not np.isfinite(self.psnr_target):
+                raise ValueError(f"psnr_target must be a positive finite dB value, got {self.psnr_target}")
+            if self.eb_mode == "pw_rel":
+                raise ValueError("psnr_target is incompatible with eb_mode='pw_rel' "
+                                 "(the eb search runs in the abs-bound domain)")
 
     @property
     def levels(self) -> tuple:
         return levels_for_stride(self.anchor_stride)
+
+    # ------------------------------------------------------- spec strings
+    @classmethod
+    def from_string(cls, spec: str) -> "CompressorSpec":
+        """Parse the canonical compression-spec grammar (module comment
+        above): ``"lossy,<eb_mode>,<eb>[,key=value...]"`` or
+        ``"lossy,psnr,<target>[,key=value...]"``. Raises
+        :class:`repro.core.errors.SpecError` (a ``ValueError``) for bad
+        grammar, unknown keys, or values the spec rejects."""
+        parts = [p.strip() for p in str(spec).split(",")]
+        if not parts or not parts[0]:
+            raise SpecError("empty compression spec")
+        if parts[0] == "lossless":
+            raise SpecError(
+                "'lossless' is a dataset-level spec (raw chunk storage, see repro.io); "
+                "CompressorSpec is error-bounded — use 'lossy,<mode>,<eb>'")
+        if parts[0] != "lossy":
+            raise SpecError(f"compression spec must start with 'lossy', got {parts[0]!r} "
+                            f"(full spec: {spec!r})")
+        if len(parts) < 3:
+            raise SpecError(f"lossy spec needs 'lossy,<mode>,<value>', got {spec!r}")
+        mode = parts[1]
+        kw: dict = {}
+        if mode == "psnr":
+            kw["psnr_target"] = _spec_parse_value("psnr_target", parts[2])
+        elif mode in _EB_MODES:
+            kw["eb_mode"] = mode
+            kw["eb"] = _spec_parse_value("eb", parts[2])
+        else:
+            raise SpecError(f"unknown error-bound mode {mode!r}; one of "
+                            f"{', '.join(_EB_MODES)} or 'psnr'")
+        allowed = {f.name for f in dataclasses.fields(cls)}
+        for tok in parts[3:]:
+            if "=" not in tok:
+                raise SpecError(f"expected key=value, got {tok!r} (full spec: {spec!r})")
+            key, _, raw = tok.partition("=")
+            key = key.strip()
+            if key not in allowed:
+                raise SpecError(f"unknown spec key {key!r}; allowed: {', '.join(sorted(allowed))}")
+            if key in kw:
+                raise SpecError(f"duplicate spec key {key!r} in {spec!r}")
+            kw[key] = _spec_parse_value(key, raw)
+        try:
+            return cls(**kw)
+        except SpecError:
+            raise
+        except (ValueError, TypeError) as e:
+            raise SpecError(f"invalid compression spec {spec!r}: {e}") from e
+
+    def to_string(self) -> str:
+        """Canonical spec string: ``from_string(spec.to_string()) == spec``
+        for every valid spec. Non-default fields append as sorted
+        ``key=value`` pairs after the ``lossy,<mode>,<value>`` head."""
+        defaults = {f.name: f.default for f in dataclasses.fields(self)}
+        if (self.psnr_target is not None and self.eb == defaults["eb"]
+                and self.eb_mode == defaults["eb_mode"]):
+            head = f"lossy,psnr,{_spec_format_value('psnr_target', self.psnr_target)}"
+            skip = {"eb", "eb_mode", "psnr_target"}
+        else:
+            head = f"lossy,{self.eb_mode},{_spec_format_value('eb', self.eb)}"
+            skip = {"eb", "eb_mode"}
+        pairs = []
+        for name in sorted(defaults):
+            if name in skip:
+                continue
+            value = getattr(self, name)
+            if value == defaults[name] or value is None:
+                continue
+            pairs.append(f"{name}={_spec_format_value(name, value)}")
+        return ",".join([head] + pairs)
 
 
 def _sections_pack(header: dict, sections: list[bytes]) -> bytes:
@@ -323,12 +468,20 @@ class Compressor:
         self._telemetry()
         sp = self.spec
         x = np.ascontiguousarray(x, np.float32)
-        eb_abs = self._abs_eb(x)
+        if sp.eb_mode == "pw_rel":
+            return self._compress_pw_rel(x)
+        psnr_hdr = {}
+        if sp.psnr_target is not None:
+            eb_abs = self._psnr_target_eb(x)
+            psnr_hdr["psnr_target"] = float(sp.psnr_target)
+        else:
+            eb_abs = self._abs_eb(x)
         base_hdr = {
             "shape": list(x.shape),
             "predictor": sp.predictor,
             "eb_abs": eb_abs,
             "anchor_stride": sp.anchor_stride,
+            **psnr_hdr,
         }
         if eb_abs == 0.0:  # constant field (or degenerate): store verbatim min
             return _sections_pack(dict(base_hdr, mode="const"), [np.float32(x.reshape(-1)[0] if x.size else 0).tobytes()])
@@ -463,6 +616,8 @@ class Compressor:
             return out
         header, sections = _sections_unpack(buf)
         out = dict(header, section_bytes=[len(s) for s in sections])
+        if header.get("mode") == "pw_rel":  # section 0 is a full inner container
+            out["inner"] = Compressor.inspect(bytes(sections[0]))
         if header.get("mode") == "interp" and header.get("predictor") == "auto" and "splines" in header:
             out["pplan"] = {
                 "ndim": len(header["padded"]),
@@ -579,7 +734,7 @@ class Compressor:
             return None
         extra = (sp.predictor, int(sp.anchor_stride), tuple(sp.plan_anchor_strides),
                  bool(sp.autotune), bool(sp.reorder), sp.pipeline,
-                 tuple(sp.pipeline_candidates or ()))
+                 tuple(sp.pipeline_candidates or ()), sp.psnr_target)
         return plan_signature(x.shape, x.dtype, sp.eb, sp.eb_mode, stats_bucket(x), extra=extra)
 
     def _compress_interp(self, x: np.ndarray, eb_abs: float, base_hdr: dict) -> bytes:
@@ -665,6 +820,146 @@ class Compressor:
         payload, hdr = fl_encode(codes)
         header = dict(base_hdr, mode="offset1d", fl=hdr)
         return _sections_pack(header, [payload])
+
+    # ------------------------------------------------------------- pw_rel
+    def _compress_pw_rel(self, x: np.ndarray) -> bytes:
+        """Point-wise-relative bound (SZ3's ``pw_rel``) via the log-domain
+        transform: compress ``y = ln|x|`` under an absolute bound
+        ``eb_log < log1p(eb)``, so every nonzero point satisfies
+        ``|x'/x - 1| = |exp(y' - y) - 1| <= eb``; signs and exact zeros
+        ride packed bitmaps and reconstruct exactly. ``y`` takes the
+        existing quantize -> orchestrate -> engine path unchanged (the
+        inner payload is a complete v2 container), so plan caching,
+        engine selection, and the fallback ladder all apply. The margin
+        subtracted from ``log1p(eb)`` covers the float32 storage of the
+        log field and the f64->f32 rounding of the reconstruction, making
+        the bound hold in delivered float32 arithmetic, not just in exact
+        math."""
+        sp = self.spec
+        eb = float(sp.eb)
+        flat = x.reshape(-1)
+        zero = flat == 0.0
+        nz = ~zero
+        sign = np.signbit(flat) & nz
+        y64 = np.log(np.abs(flat[nz].astype(np.float64)))
+        y32 = y64.astype(np.float32)
+        cast_err = float(np.max(np.abs(y64 - y32))) if y32.size else 0.0
+        slack = 1.2e-7  # f64->f32 rounding of exp(y') on the way back out
+        eb_log = (float(np.log1p(eb)) - cast_err - slack) * (1.0 - 2e-4)
+        if eb_log <= 0:
+            raise ValueError(
+                f"eb={eb:g} is below the float32 pw_rel transform's resolution "
+                f"(log-domain cast error {cast_err:.3g}); use a larger bound or eb_mode='abs'")
+        fill = float(y32.min()) if y32.size else 0.0  # zero slots: inert filler
+        y = np.full(flat.shape, np.float32(fill), np.float32)
+        y[nz] = y32
+        inner = Compressor(dataclasses.replace(sp, eb_mode="abs", eb=eb_log),
+                           plan_cache=self.plan_cache)
+        ibuf = inner.compress(y.reshape(x.shape))
+        itel = inner.last_telemetry or {}
+        tel = self._telemetry()
+        tel["fallbacks"].extend(itel.get("fallbacks") or ())
+        for k in ("pipeline", "plan_cache"):
+            if k in itel:
+                tel[k] = itel[k]
+        self.last_plan = inner.last_plan
+        header = {"shape": list(x.shape), "mode": "pw_rel", "predictor": sp.predictor,
+                  "eb_rel": eb, "eb_abs": float(eb_log), "n_zero": int(zero.sum())}
+        return _sections_pack(header, [ibuf, np.packbits(sign).tobytes(),
+                                       np.packbits(zero).tobytes()])
+
+    def _decompress_pw_rel(self, header, sections, shape, device: bool = False) -> np.ndarray:
+        ihdr, isec = _sections_unpack(sections[0])
+        y = np.asarray(self._decompress_sections(ihdr, isec, device=device))
+        sign = np.unpackbits(np.frombuffer(sections[1], np.uint8), count=y.size).astype(bool)
+        zero = np.unpackbits(np.frombuffer(sections[2], np.uint8), count=y.size).astype(bool)
+        out = np.exp(y.reshape(-1).astype(np.float64))
+        out[sign] = -out[sign]
+        out[zero] = 0.0
+        return out.astype(np.float32).reshape(shape)
+
+    # -------------------------------------------------------- psnr target
+    def _psnr_trial_field(self, x: np.ndarray) -> np.ndarray:
+        """The trial sample the eb search compresses: the field itself when
+        small, else a centered <=64-wide crop per axis (a crop keeps the
+        field's smoothness structure; a strided subsample would not)."""
+        if x.size <= (1 << 20):
+            return x
+        sl = []
+        for d in x.shape:
+            if d <= 64:
+                sl.append(slice(None))
+            else:
+                c = d // 2
+                sl.append(slice(c - 32, c + 32))
+        return np.ascontiguousarray(x[tuple(sl)])
+
+    def _psnr_target_eb(self, x: np.ndarray) -> float:
+        """Binary-search the absolute eb whose reconstruction lands on
+        ``spec.psnr_target`` dB (range-normalized, full-field range).
+
+        The search runs on MSE, not PSNR — ``mse_target = rng^2 *
+        10^(-target/10)`` — so the trial crop's narrower value range
+        cannot skew the dB arithmetic, and aims 0.5 dB above target so
+        trial-vs-full sampling error stays inside a ±1 dB window. Each
+        trial compresses with the cheap fixed configuration: distortion
+        is independent of the lossless pipeline (it is lossless) and
+        nearly independent of predictor tuning (quantization error is
+        ~uniform within ±eb), so the trials skip both tuners."""
+        sp = self.spec
+        target = float(sp.psnr_target)
+        rng = float(np.max(x) - np.min(x)) if x.size else 0.0
+        if rng == 0.0:
+            return 0.0  # constant field: verbatim const container, PSNR = inf
+        trial = self._psnr_trial_field(x)
+        tspec = dataclasses.replace(
+            sp, psnr_target=None, eb_mode="abs", eb=1.0,
+            predictor="interp" if sp.predictor == "auto" else sp.predictor,
+            pipeline="none", pipeline_candidates=None, autotune=False)
+        mse_aim = rng * rng * 10.0 ** (-(target + 0.5) / 10.0)
+        trials = 0
+
+        def mse_at(eb_abs: float) -> float:
+            nonlocal trials
+            trials += 1
+            comp = Compressor(dataclasses.replace(tspec, eb=float(eb_abs)))
+            y = comp.decompress(comp.compress(trial))
+            d = trial.astype(np.float64) - y.astype(np.float64)
+            return float(np.mean(d * d))
+
+        # uniform-quantization model (mse ~ eb^2/3) seeds the bracket
+        eb0 = min(float(np.sqrt(3.0 * mse_aim)), 0.25 * rng)
+        lo = hi = eb0
+        if mse_at(eb0) <= mse_aim:  # feasible: push eb up until it breaks
+            grown = False
+            for _ in range(8):
+                hi = lo * 4.0
+                if mse_at(hi) > mse_aim:
+                    grown = True
+                    break
+                lo = hi
+            if not grown:
+                hi = lo  # even the loosest probe met the target
+        else:  # infeasible at the model guess: tighten until it holds
+            for _ in range(12):
+                lo = lo / 4.0
+                if mse_at(lo) <= mse_aim:
+                    break
+            else:
+                raise ValueError(
+                    f"psnr_target={target:g} dB unreachable: trial mse "
+                    f"{mse_at(lo):.3g} > target {mse_aim:.3g} even at eb={lo:.3g}")
+        while hi / lo > 1.02:  # log-bisect, keeping lo on the feasible side
+            mid = float(np.sqrt(lo * hi))
+            if mse_at(mid) <= mse_aim:
+                lo = mid
+            else:
+                hi = mid
+        self._telemetry()["psnr_search"] = {
+            "target_db": target, "eb_abs": float(lo), "trials": trials,
+            "trial_elems": int(trial.size),
+        }
+        return float(lo)
 
     # ------------------------------------------------------------ decompress
     def decompress(self, buf: bytes, frames=None, *, on_error: str = "raise",
@@ -767,6 +1062,8 @@ class Compressor:
             codes = fl_decode(sections[0], header["fl"])
             out = lor.offset1d_decode(jnp.asarray(codes), jnp.float32(2.0 * header["eb_abs"]))
             return out.reshape(shape) if device else np.asarray(out).reshape(shape)
+        if mode == "pw_rel":
+            return self._decompress_pw_rel(header, sections, shape, device=device)
         raise ValueError(mode)
 
     def _decompress_interp(self, header, sections, shape, device: bool = False) -> np.ndarray:

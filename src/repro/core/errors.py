@@ -45,6 +45,18 @@ class CheckpointDamageError(RuntimeError):
     """A checkpoint leaf failed its integrity check under ``strict=True``."""
 
 
+class SpecError(ValueError):
+    """A compression-spec string failed to parse or validate.
+
+    Raised by :meth:`repro.core.CompressorSpec.from_string` (and every
+    consumer that accepts the spec-string grammar: ``repro.io``, the
+    compressd protocol, ``serve --kv-spec``, the checkpoint codec's
+    ``REPRO_CKPT_SPEC``) for bad grammar, unknown keys, or values the
+    underlying :class:`~repro.core.CompressorSpec` rejects. Subclasses
+    ``ValueError`` so pre-grammar ``except ValueError`` handlers keep
+    working."""
+
+
 class ServiceError(RuntimeError):
     """Base for compression-service (repro.launch.compressd) failures.
 

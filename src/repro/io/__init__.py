@@ -1,0 +1,15 @@
+"""repro.io — dataset-level compression facade (enstools-style).
+
+    import repro.io as rio
+    ds = rio.Dataset.from_arrays({"t2m": t2m, "u10": u10})
+    rio.write(ds, "weather.cszh3", compression="lossy,abs,1e-3,predictor=auto")
+    back = rio.read("weather.cszh3")
+    one = rio.read_variable("weather.cszh3", "t2m", chunks=(0, 1))
+
+The compression argument is the canonical spec string
+(``CompressorSpec.from_string`` grammar) or ``"lossless"``; chunked
+multi-variable files ride container v3 frames with per-chunk random
+access. See :mod:`repro.io.rw` for the layout.
+"""
+from .dataset import Dataset, Variable, open_dataset  # noqa: F401
+from .rw import manifest, parse_compression, read, read_variable, write  # noqa: F401

@@ -70,6 +70,7 @@ import socket
 import struct
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
@@ -81,6 +82,7 @@ from repro.core.errors import (
     ServiceError,
     ServiceOverloadedError,
     ServiceProtocolError,
+    SpecError,
 )
 from repro.core.serial import pack_obj, unpack_obj
 
@@ -95,7 +97,7 @@ _DRAIN_CHUNK = 1 << 16
 _SPEC_KEYS = frozenset({
     "eb", "eb_mode", "predictor", "pipeline", "anchor_stride", "autotune",
     "reorder", "backend", "engine", "splines", "schemes",
-    "pipeline_candidates", "plan_anchor_strides",
+    "pipeline_candidates", "plan_anchor_strides", "psnr_target",
 })
 
 
@@ -414,18 +416,34 @@ class CompressdServer:
         return self._respond(sock, self._error_response(e), b"")
 
     # ------------------------------------------------------------- handlers
-    def _compressor(self, spec_kw: dict) -> Compressor:
-        kw = {}
-        for k, v in (spec_kw or {}).items():
-            if k not in _SPEC_KEYS:
-                raise ServiceProtocolError(
-                    f"unknown spec field {k!r}; allowed: {', '.join(sorted(_SPEC_KEYS))}")
-            kw[k] = tuple(v) if isinstance(v, list) else v
-        key = tuple(sorted(kw.items()))
+    def _compressor(self, spec_req) -> Compressor:
+        """Resolve a request's ``spec`` field to a (cached) Compressor.
+
+        The canonical wire form is the spec *string* (the
+        ``CompressorSpec.from_string`` grammar) — one opaque value, parsed
+        and validated in one place. The legacy dict-of-kwargs form still
+        works (key-whitelisted as before) so old clients keep running; the
+        client side deprecates it."""
+        if isinstance(spec_req, str):
+            try:
+                spec = CompressorSpec.from_string(spec_req)
+            except SpecError as e:
+                raise ServiceProtocolError(f"bad spec string: {e}") from e
+            key = ("spec", spec_req)
+        else:
+            kw = {}
+            for k, v in (spec_req or {}).items():
+                if k not in _SPEC_KEYS:
+                    raise ServiceProtocolError(
+                        f"unknown spec field {k!r}; allowed: {', '.join(sorted(_SPEC_KEYS))}")
+                kw[k] = tuple(v) if isinstance(v, list) else v
+            # bad field values keep raising as before (ValueError on the wire)
+            spec = CompressorSpec(**kw)
+            key = tuple(sorted(kw.items()))
         with self._comp_lock:
             comp = self._comps.get(key)
             if comp is None:
-                comp = Compressor(CompressorSpec(**kw), plan_cache=self.plan_cache)
+                comp = Compressor(spec, plan_cache=self.plan_cache)
                 self._comps[key] = comp
         return comp
 
@@ -625,27 +643,50 @@ class CompressdClient:
         self.close()
 
     # ------------------------------------------------------------------ ops
-    def compress(self, arr: np.ndarray, *, stream: str | None = None, **spec) -> bytes:
+    @staticmethod
+    def _spec_header(spec, legacy: dict):
+        """The wire ``spec`` value: canonical string from ``spec=``, or the
+        legacy kwargs dict (deprecated) — never both."""
+        if spec is not None and legacy:
+            raise TypeError("pass spec=... or legacy spec kwargs, not both")
+        if spec is not None:
+            if isinstance(spec, CompressorSpec):
+                return spec.to_string()
+            CompressorSpec.from_string(spec)  # validate client-side: typed SpecError
+            return str(spec)
+        if legacy:
+            warnings.warn(
+                "per-field spec kwargs on CompressdClient are deprecated; pass "
+                "spec=\"lossy,<eb_mode>,<eb>,...\" (CompressorSpec.from_string "
+                "grammar) instead", DeprecationWarning, stacklevel=3)
+            return {k: list(v) if isinstance(v, tuple) else v for k, v in legacy.items()}
+        return None
+
+    def compress(self, arr: np.ndarray, *, spec=None, stream: str | None = None,
+                 **legacy) -> bytes:
         """Compress ``arr`` on the daemon; returns the container bytes.
 
-        ``spec`` kwargs are CompressorSpec fields (eb, eb_mode, predictor,
-        pipeline, ...); the response header lands on ``last_info``.
+        ``spec`` is the canonical compression-spec string (the
+        ``CompressorSpec.from_string`` grammar) or a ``CompressorSpec``;
+        the response header lands on ``last_info``. Bare CompressorSpec
+        kwargs (``eb=...``, ...) still work but are deprecated.
         """
         arr = np.ascontiguousarray(arr)
         header = {"op": "compress", "shape": list(arr.shape), "dtype": str(arr.dtype)}
-        if spec:
-            header["spec"] = {k: list(v) if isinstance(v, tuple) else v
-                              for k, v in spec.items()}
+        wire_spec = self._spec_header(spec, legacy)
+        if wire_spec is not None:
+            header["spec"] = wire_spec
         if stream or self.stream:
             header["stream"] = stream or self.stream
         _, payload = self.request(header, arr.tobytes())
         return payload
 
-    def decompress(self, buf: bytes, *, stream: str | None = None, **spec) -> np.ndarray:
+    def decompress(self, buf: bytes, *, spec=None, stream: str | None = None,
+                   **legacy) -> np.ndarray:
         header = {"op": "decompress"}
-        if spec:
-            header["spec"] = {k: list(v) if isinstance(v, tuple) else v
-                              for k, v in spec.items()}
+        wire_spec = self._spec_header(spec, legacy)
+        if wire_spec is not None:
+            header["spec"] = wire_spec
         if stream or self.stream:
             header["stream"] = stream or self.stream
         rh, payload = self.request(header, bytes(buf))

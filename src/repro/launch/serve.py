@@ -23,7 +23,7 @@ from repro.configs import get_config
 from repro.models import decode_step, init_params, prefill
 
 
-def _kv_roundtrip(cache, eb: float, compressd: str | None = None):
+def _kv_roundtrip(cache, spec, compressd: str | None = None):
     """Offload+restore the float cache leaves as one v3 frame stream.
 
     Offload is *incremental*: each cache leaf (a layer's K or V tensor)
@@ -47,14 +47,17 @@ def _kv_roundtrip(cache, eb: float, compressd: str | None = None):
     """
     import io
 
-    from repro.core import Compressor, FrameReader, FrameWriter, cusz_hi_auto
+    from repro.core import Compressor, CompressorSpec, FrameReader, FrameWriter
 
+    if isinstance(spec, str):  # canonical spec-string grammar
+        spec = CompressorSpec.from_string(spec)
     client = None
     if compressd:
         from repro.launch.compressd import CompressdClient
 
         client = CompressdClient(compressd, stream="serve-kv")
-    comp = cusz_hi_auto(eb=eb, autotune=False)
+    comp = Compressor(spec)
+    spec_str = spec.to_string()
     stats = {"raw_bytes": 0, "comp_bytes": 0, "frames": 0, "pipelines": {}}
     leaves, treedef = jax.tree.flatten(cache)
 
@@ -63,14 +66,14 @@ def _kv_roundtrip(cache, eb: float, compressd: str | None = None):
     # stream honestly truncated instead of trailer-sealed-but-short)
     sink = io.BytesIO()
     framed: list[int] = []  # leaf indices, in frame order
-    with FrameWriter(sink, {"kind": "kvcache", "eb": eb}, sync=True) as writer:
+    with FrameWriter(sink, {"kind": "kvcache", "spec": spec_str}, sync=True) as writer:
         for i, leaf in enumerate(leaves):
             arr = np.asarray(leaf)
             if not jnp.issubdtype(leaf.dtype, jnp.floating) or arr.size < 4096:
                 continue
             field = arr.astype(np.float32)
             if client is not None:
-                buf = client.compress(field, eb=eb, pipeline="auto", autotune=False)
+                buf = client.compress(field, spec=spec_str)
                 if (client.last_info or {}).get("plan_cache") == "hit":
                     stats["plan_cache_hits"] = stats.get("plan_cache_hits", 0) + 1
             else:
@@ -118,8 +121,12 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--kv-compress", action="store_true",
                     help="offload/restore the prefill KV cache through pipeline='auto'")
-    ap.add_argument("--kv-eb", type=float, default=1e-3,
-                    help="value-range-relative error bound for --kv-compress")
+    ap.add_argument("--kv-spec", default=None, metavar="SPEC",
+                    help="compression spec string for --kv-compress "
+                         "(CompressorSpec.from_string grammar; default "
+                         "'lossy,rel,1e-3,autotune=false,pipeline=auto')")
+    ap.add_argument("--kv-eb", type=float, default=None,
+                    help="DEPRECATED: use --kv-spec 'lossy,rel,EB,...' instead")
     ap.add_argument("--compressd", default=None, metavar="ADDR",
                     help="route --kv-compress through a compressd daemon at "
                          "ADDR (host:port or unix:/path) instead of in-process")
@@ -143,13 +150,23 @@ def main(argv=None):
     t_prefill = time.time() - t0
 
     if args.kv_compress:
+        kv_spec = args.kv_spec or "lossy,rel,1e-3,autotune=false,pipeline=auto"
+        if args.kv_eb is not None:
+            if args.kv_spec is not None:
+                ap.error("--kv-eb and --kv-spec are mutually exclusive")
+            import warnings
+
+            warnings.warn("--kv-eb is deprecated; use --kv-spec "
+                          f"'lossy,rel,{args.kv_eb:g},autotune=false,pipeline=auto'",
+                          DeprecationWarning, stacklevel=2)
+            kv_spec = f"lossy,rel,{args.kv_eb:g},autotune=false,pipeline=auto"
         t0 = time.time()
-        cache, kv = _kv_roundtrip(cache, args.kv_eb, compressd=args.compressd)
+        cache, kv = _kv_roundtrip(cache, kv_spec, compressd=args.compressd)
         via = f" via compressd {args.compressd} ({kv.get('plan_cache_hits', 0)} plan-cache hits)" \
             if args.compressd else ""
         print(
             f"kv-cache offload: {kv['raw_bytes']/2**20:.1f} MiB -> {kv['comp_bytes']/2**20:.1f} MiB "
-            f"in {kv['frames']} layer-frames (CR {kv['cr']:.2f}, eb={args.kv_eb:g} rel, "
+            f"in {kv['frames']} layer-frames (CR {kv['cr']:.2f}, spec={kv_spec!r}, "
             f"pipelines {kv['pipelines']}, {time.time()-t0:.2f}s roundtrip){via}"
         )
 

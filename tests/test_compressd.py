@@ -336,3 +336,37 @@ def test_frame_codec_symmetry():
     assert rh == hdr and rp == b"payload"
     (hlen,) = struct.unpack_from("<I", frame, 4)
     assert len(frame) == 4 + 4 + hlen + 8 + len(b"payload")
+
+
+# ------------------------------------------------------- spec-string surface
+def test_spec_string_roundtrip_no_warning(server):
+    import warnings as W
+
+    from repro.core import SpecError
+
+    x = _field(9)
+    with CompressdClient(server.address, stream="t-specstr") as c:
+        with W.catch_warnings():
+            W.simplefilter("error", DeprecationWarning)
+            buf = c.compress(x, spec="lossy,abs,1e-3,autotune=false")
+            y = c.decompress(buf)
+        assert np.max(np.abs(x - y)) <= 1e-3 * (1 + 1e-4) + 1e-9
+        # CompressorSpec objects are accepted and canonicalized client-side
+        buf2 = c.compress(x, spec=CompressorSpec(eb=1e-3, eb_mode="abs", autotune=False))
+        assert len(buf2) == len(buf)
+        # bad grammar fails client-side with the typed error, nothing sent
+        with pytest.raises(SpecError):
+            c.compress(x, spec="lossy,abs,oops")
+
+
+def test_legacy_spec_kwargs_deprecated_but_equivalent(server):
+    x = _field(9)
+    with CompressdClient(server.address, stream="t-legacy") as c:
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            legacy = c.compress(x, eb=1e-3, eb_mode="abs", autotune=False)
+        modern = c.compress(x, spec="lossy,abs,1e-3,autotune=false")
+        y = c.decompress(legacy)
+        assert np.max(np.abs(x - y)) <= 1e-3 * (1 + 1e-4) + 1e-9
+        assert len(legacy) == len(modern)  # same spec through either surface
+        with pytest.raises(TypeError, match="not both"):
+            c.compress(x, spec="lossy,abs,1e-3", eb=1e-3)

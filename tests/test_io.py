@@ -1,0 +1,166 @@
+"""repro.io: dataset write/read round-trip, per-chunk random access,
+spec handling, and adapters."""
+import numpy as np
+import pytest
+
+import repro.io as rio
+from repro.core import CompressorSpec, SpecError, frames as frames_mod, max_abs_err
+from repro.data import load_real_fields
+
+
+@pytest.fixture(scope="module")
+def weather():
+    suite = load_real_fields()
+    return {
+        "t2m": suite["temperature"][:48, :64],
+        "q": suite["humidity"][:48, :64],
+        "vort": suite["vorticity"][:24, :24, :24],
+    }
+
+
+def _dataset(weather):
+    ds = rio.Dataset(attrs={"title": "unit", "run": 3})
+    ds["t2m"] = rio.Variable(weather["t2m"], ("lat", "lon"), {"units": "K"})
+    ds["q"] = rio.Variable(weather["q"], ("lat", "lon"))
+    ds["vort"] = rio.Variable(weather["vort"], ("z", "y", "x"))
+    ds["step"] = rio.Variable(np.arange(10, dtype=np.int32), ("step",))
+    return ds
+
+
+# ------------------------------------------------------------------ lossless
+def test_lossless_round_trip_byte_identity(tmp_path, weather):
+    ds = _dataset(weather)
+    path = tmp_path / "ds.cszh3"
+    man = rio.write(ds, path, compression="lossless", chunks=(24, 32))
+    assert man["bytes_written"] == path.stat().st_size
+    back = rio.read(path)
+    assert back.attrs == {"title": "unit", "run": 3}
+    for name in ds:
+        assert np.array_equal(back[name].data, ds[name].data), name
+        assert back[name].dtype == ds[name].dtype
+        assert back[name].dims == ds[name].dims
+    assert back["t2m"].attrs["units"] == "K"
+
+
+def test_lossless_single_chunk_random_access(tmp_path, weather):
+    ds = _dataset(weather)
+    path = tmp_path / "ds.cszh3"
+    rio.write(ds, path, compression="lossless", chunks={"t2m": (24, 32)})
+    # grid is 2x2: chunk (1, 1) is the bottom-right block, byte-identical
+    c = rio.read_variable(path, "t2m", chunks=(1, 1))
+    assert np.array_equal(c, weather["t2m"][24:48, 32:64])
+    # flat index addresses the same grid in C order
+    assert np.array_equal(rio.read_variable(path, "t2m", chunks=3), c)
+    with pytest.raises(IndexError):
+        rio.read_variable(path, "t2m", chunks=(2, 0))
+    with pytest.raises(KeyError):
+        rio.read_variable(path, "nope")
+
+
+# --------------------------------------------------------------------- lossy
+def test_lossy_round_trip_bound_per_variable(tmp_path, weather):
+    ds = _dataset(weather)
+    path = tmp_path / "ds.cszh3"
+    rio.write(ds, path, compression={
+        None: "lossy,abs,1e-2,pipeline=cr,autotune=false",
+        "q": "lossy,pw_rel,1e-2,pipeline=cr,autotune=false",
+        "step": "lossless",
+    }, chunks={"t2m": (24, 32)})
+    back = rio.read(path)
+    # slack: contract slop plus one f32 ULP at the field's magnitude (~300 K)
+    tol = 1e-2 * (1 + 1e-4) + float(np.spacing(np.float32(350.0)))
+    assert max_abs_err(weather["t2m"], back["t2m"].data) <= tol
+    assert max_abs_err(weather["vort"], back["vort"].data) <= 1e-2 * (1 + 1e-4) + 1e-6
+    # pw_rel on the humidity variable: point-wise relative bound
+    from repro.core import max_rel_err
+
+    assert max_rel_err(weather["q"], back["q"].data) <= 1e-2
+    # int variable survives losslessly even under a lossy default
+    assert np.array_equal(back["step"].data, ds["step"].data)
+    assert back["step"].dtype == np.int32
+
+
+def test_lossy_chunk_bound_holds_per_chunk(tmp_path, weather):
+    ds = rio.Dataset({"t2m": rio.Variable(weather["t2m"], ("lat", "lon"))})
+    path = tmp_path / "c.cszh3"
+    rio.write(ds, path, compression="lossy,abs,5e-3,pipeline=cr,autotune=false",
+              chunks=(24, 32))
+    tol = 5e-3 * (1 + 1e-4) + float(np.spacing(np.float32(350.0)))
+    for idx, sl in [((0, 0), np.s_[:24, :32]), ((1, 1), np.s_[24:, 32:])]:
+        c = rio.read_variable(path, "t2m", chunks=idx)
+        assert max_abs_err(weather["t2m"][sl], c) <= tol
+
+
+# ------------------------------------------------------------------ manifest
+def test_manifest_and_frame_layout(tmp_path, weather):
+    ds = _dataset(weather)
+    path = tmp_path / "ds.cszh3"
+    rio.write(ds, path, compression="lossless", chunks={"t2m": (24, 32)})
+    man = rio.manifest(path)
+    assert man["kind"] == "dataset"
+    by_name = {v["name"]: v for v in man["variables"]}
+    assert by_name["t2m"]["n_chunks"] == 4
+    assert by_name["t2m"]["spec"] == "lossless"
+    # frame ranges tile [0, total) contiguously in manifest order
+    total = sum(v["n_chunks"] for v in man["variables"])
+    starts = [v["frame_start"] for v in man["variables"]]
+    assert starts == sorted(starts) and starts[0] == 0
+    buf = path.read_bytes()
+    _, table = frames_mod.frame_table(buf)
+    assert len(table) == total
+
+
+def test_spec_validation_and_errors(tmp_path, weather):
+    ds = rio.Dataset({"a": weather["t2m"]})
+    with pytest.raises(SpecError):
+        rio.write(ds, tmp_path / "x.cszh3", compression="lossy,abs,nope")
+    with pytest.raises(SpecError):
+        rio.write(ds, tmp_path / "x.cszh3", compression=42)
+    assert rio.parse_compression("lossless") is None
+    assert rio.parse_compression(None) is None
+    sp = rio.parse_compression("lossy,abs,1e-3")
+    assert isinstance(sp, CompressorSpec) and sp.eb == 1e-3
+    assert rio.parse_compression(sp) is sp
+    # reading a non-dataset v3 stream is a typed refusal
+    other = frames_mod.pack_frames({"kind": "chunks"}, [b"x"])
+    p = tmp_path / "other.cszh3"
+    p.write_bytes(other)
+    with pytest.raises(ValueError, match="dataset"):
+        rio.read(p)
+
+
+# ------------------------------------------------------------------ adapters
+def test_npz_adapter_round_trip(tmp_path, weather):
+    ds = _dataset(weather)
+    ds.to_npz(tmp_path / "w.npz")
+    back = rio.open_dataset(tmp_path / "w.npz")
+    for name in ds:
+        assert np.array_equal(back[name].data, ds[name].data)
+
+
+def test_hdf5_adapter_round_trip(tmp_path, weather):
+    pytest.importorskip("h5py")
+    ds = _dataset(weather)
+    ds.to_hdf5(tmp_path / "w.h5")
+    back = rio.open_dataset(tmp_path / "w.h5")
+    for name in ds:
+        assert np.array_equal(back[name].data, ds[name].data)
+        assert back[name].dims == ds[name].dims
+    assert back["t2m"].attrs["units"] == "K"
+
+
+def test_dataset_model_validation():
+    with pytest.raises(ValueError):
+        rio.Variable(np.zeros((2, 2)), dims=("only-one",))
+    ds = rio.Dataset({"x": np.zeros((3, 4))})
+    assert ds["x"].dims == ("x_d0", "x_d1")
+    assert "x" in ds and len(ds) == 1
+
+
+def test_scalar_and_empty_variables(tmp_path):
+    ds = rio.Dataset({"pi": np.float64(3.14159), "empty": np.zeros((0, 4), np.float32)})
+    path = tmp_path / "s.cszh3"
+    rio.write(ds, path, compression="lossless")
+    back = rio.read(path)
+    assert back["pi"].data == np.float64(3.14159)
+    assert back["empty"].shape == (0, 4)

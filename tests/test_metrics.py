@@ -1,0 +1,89 @@
+"""Quality metrics: edge cases (empty/constant fields), SSIM, spectral
+error, and the quality_report bundle."""
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.data import load_real_fields
+
+
+def test_bit_rate_empty_array_is_zero():
+    assert M.bit_rate(np.zeros((0,), np.float32), b"") == 0.0
+    assert M.bit_rate(np.zeros((0, 4), np.float32), b"1234") == 0.0
+
+
+def test_bit_rate_basic():
+    x = np.zeros((8, 8), np.float32)
+    assert M.bit_rate(x, b"\x00" * 64) == pytest.approx(8.0)  # 512/64 bytes
+
+
+def test_psnr_constant_field_defined():
+    x = np.full((16, 16), 3.0, np.float32)
+    # perfect reconstruction of a constant field: infinite, not NaN
+    assert M.psnr(x, x) == np.inf
+    # imperfect reconstruction still yields a finite, ordered number
+    y = x + 1e-3
+    v = M.psnr(x, y)
+    assert np.isfinite(v) and v > 0
+    worse = M.psnr(x, x + 1e-2)
+    assert worse < v
+
+
+def test_psnr_orders_by_error():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 64)).astype(np.float32)
+    a = M.psnr(x, x + 1e-4 * rng.standard_normal(x.shape).astype(np.float32))
+    b = M.psnr(x, x + 1e-2 * rng.standard_normal(x.shape).astype(np.float32))
+    assert a > b > 0
+
+
+def test_max_rel_err_zero_handling():
+    x = np.array([0.0, 1.0, -2.0], np.float32)
+    y = np.array([0.0, 1.01, -2.0], np.float32)
+    assert M.max_rel_err(x, y) == pytest.approx(0.01, rel=1e-3)
+    # turning a zero into a nonzero has no finite relative bound
+    assert M.max_rel_err(x, np.array([0.1, 1.0, -2.0], np.float32)) == np.inf
+
+
+def test_ssim_bounds_and_identity():
+    x = load_real_fields()["temperature"][:48, :64]
+    assert M.ssim(x, x) == pytest.approx(1.0)
+    noisy = x + np.random.default_rng(1).normal(0, 2.0, x.shape).astype(np.float32)
+    s = M.ssim(x, noisy)
+    assert -1.0 <= s < 1.0
+    # mild noise scores better than heavy noise
+    mild = x + np.random.default_rng(1).normal(0, 0.2, x.shape).astype(np.float32)
+    assert M.ssim(x, mild) > s
+
+
+def test_ssim_3d():
+    v = load_real_fields()["vorticity"][:24, :24, :24]
+    assert M.ssim(v, v) == pytest.approx(1.0)
+
+
+def test_spectral_error_identity_and_ordering():
+    x = load_real_fields()["temperature"][:48, :64]
+    assert M.spectral_error(x, x) == pytest.approx(0.0, abs=1e-12)
+    rng = np.random.default_rng(2)
+    mild = x + rng.normal(0, 0.05, x.shape).astype(np.float32)
+    heavy = x + rng.normal(0, 1.0, x.shape).astype(np.float32)
+    assert 0 <= M.spectral_error(x, mild) < M.spectral_error(x, heavy)
+
+
+def test_compression_ratio():
+    x = np.zeros((32, 32), np.float32)
+    assert M.compression_ratio(x, b"\x00" * 1024) == pytest.approx(4.0)
+
+
+def test_quality_report_bundle():
+    x = load_real_fields()["pressure"][:48, :64]
+    y = x + np.float32(1e-3)
+    rep = M.quality_report(x, y, compressed=b"\x00" * 100)
+    for key in ("psnr", "ssim", "spectral_error", "max_abs_err", "max_rel_err",
+                "cr", "bit_rate"):
+        assert key in rep, key
+    assert rep["max_abs_err"] == pytest.approx(1e-3, rel=0.05)  # f32 rounding
+    assert rep["cr"] == pytest.approx(x.nbytes / 100)
+    # without the payload the size-dependent entries are omitted
+    rep2 = M.quality_report(x, y)
+    assert "cr" not in rep2 and "bit_rate" not in rep2

@@ -1,0 +1,151 @@
+"""Spec-string grammar: parse/format round-trip, typed errors, and the
+new error modes (pw_rel, psnr_target) the grammar exposes."""
+import numpy as np
+import pytest
+
+from repro.core import Compressor, CompressorSpec, SpecError, max_rel_err, psnr
+from repro.data import load_real_fields
+
+
+# ------------------------------------------------------------------ grammar
+def test_from_string_basics():
+    sp = CompressorSpec.from_string("lossy,abs,1e-3")
+    assert sp.eb_mode == "abs" and sp.eb == 1e-3
+
+    sp = CompressorSpec.from_string("lossy,rel,0.01,predictor=auto,pipeline=auto")
+    assert sp.predictor == "auto" and sp.pipeline == "auto" and sp.eb_mode == "rel"
+
+    sp = CompressorSpec.from_string("lossy,pw_rel,1e-2")
+    assert sp.eb_mode == "pw_rel" and sp.eb == 1e-2
+
+    sp = CompressorSpec.from_string("lossy,psnr,60")
+    assert sp.psnr_target == 60.0
+
+    sp = CompressorSpec.from_string(
+        "lossy,abs,1e-3,autotune=false,splines=cubic:linear:cubic:cubic,anchor_stride=8")
+    assert sp.autotune is False
+    assert sp.splines == ("cubic", "linear", "cubic", "cubic")
+    assert sp.anchor_stride == 8
+
+
+@pytest.mark.parametrize("s", [
+    "lossy,abs,1e-3",
+    "lossy,rel,0.001",
+    "lossy,pw_rel,0.01",
+    "lossy,psnr,60.0",
+    "lossy,abs,1e-3,predictor=auto,pipeline=auto",
+    "lossy,rel,1e-4,anchor_stride=8,autotune=false,reorder=false",
+    "lossy,abs,0.5,pipeline_candidates=hf:tp,engine=numpy",
+    "lossy,psnr,42.5,predictor=interp,pipeline=cr",
+])
+def test_round_trip(s):
+    sp = CompressorSpec.from_string(s)
+    again = CompressorSpec.from_string(sp.to_string())
+    assert again == sp
+    # canonical form is a fixed point
+    assert again.to_string() == sp.to_string()
+
+
+def test_to_string_skips_defaults():
+    assert CompressorSpec(eb=1e-3, eb_mode="abs").to_string() == "lossy,abs,0.001"
+    # non-defaults appear, sorted
+    s = CompressorSpec(eb=1e-3, eb_mode="abs", predictor="auto", autotune=False).to_string()
+    assert s == "lossy,abs,0.001,autotune=false,predictor=auto"
+
+
+def test_psnr_head_form():
+    sp = CompressorSpec(psnr_target=60.0)
+    assert sp.to_string().startswith("lossy,psnr,60")
+    assert CompressorSpec.from_string(sp.to_string()) == sp
+
+
+@pytest.mark.parametrize("bad", [
+    "",
+    "lossy",
+    "lossy,abs",
+    "bogus,abs,1e-3",
+    "lossy,bogus,1e-3",
+    "lossy,abs,not-a-number",
+    "lossy,abs,1e-3,unknownkey=1",
+    "lossy,abs,1e-3,eb=2",               # duplicate of the head value
+    "lossy,abs,1e-3,predictor",          # key without value
+    "lossy,pw_rel,0",                    # pw_rel needs eb > 0
+    "lossy,psnr,-5",                     # target must be positive
+    "lossy,psnr,60,eb_mode=pw_rel",      # mutually exclusive
+    "lossy,abs,1e-3,autotune=maybe",     # bad bool
+    "lossless",                          # dataset-level, not a lossy spec
+])
+def test_invalid_specs_raise_typed_error(bad):
+    with pytest.raises(SpecError):
+        CompressorSpec.from_string(bad)
+    # SpecError is a ValueError for pre-grammar handlers
+    with pytest.raises(ValueError):
+        CompressorSpec.from_string(bad)
+
+
+# --------------------------------------------------------------- error modes
+def test_pw_rel_bound_on_real_fixture():
+    x = load_real_fields()["humidity"][:48, :64]
+    eb = 1e-2
+    comp = Compressor(CompressorSpec.from_string(
+        f"lossy,pw_rel,{eb},pipeline=cr,autotune=false"))
+    buf = comp.compress(x)
+    y = comp.decompress(buf)
+    assert max_rel_err(x, y) <= eb
+    hdr = Compressor.inspect(buf)
+    assert hdr["mode"] == "pw_rel" and hdr["eb_rel"] == eb
+    assert "inner" in hdr  # the log-domain container is inspectable too
+
+
+def test_pw_rel_signs_and_zeros_exact():
+    rng = np.random.default_rng(3)
+    x = (np.exp(rng.normal(0, 2, (24, 24, 24)))
+         * rng.choice([-1.0, 1.0], (24, 24, 24))).astype(np.float32)
+    x[0, :4, :4] = 0.0
+    comp = Compressor(CompressorSpec.from_string("lossy,pw_rel,1e-2,autotune=false"))
+    y = comp.decompress(comp.compress(x))
+    assert np.all(y[x == 0] == 0)
+    nz = x != 0
+    assert np.all(np.sign(y[nz]) == np.sign(x[nz]))
+    assert max_rel_err(x, y) <= 1e-2
+
+
+def test_pw_rel_too_tight_for_f32_raises():
+    x = np.linspace(1.0, 2.0, 4096, dtype=np.float32).reshape(64, 64)
+    comp = Compressor(CompressorSpec.from_string("lossy,pw_rel,1e-8"))
+    with pytest.raises(ValueError, match="resolution"):
+        comp.compress(x)
+
+
+def test_psnr_target_within_1db_on_real_fixture():
+    x = load_real_fields()["temperature"][:48, :64]
+    target = 60.0
+    comp = Compressor(CompressorSpec.from_string(
+        f"lossy,psnr,{target},pipeline=cr,autotune=false"))
+    buf = comp.compress(x)
+    search = comp.last_telemetry.get("psnr_search")
+    y = comp.decompress(buf)
+    achieved = psnr(x, y)
+    assert achieved >= target - 1.0
+    hdr = Compressor.inspect(buf)
+    assert hdr["psnr_target"] == target
+    # the searched bound is recorded like any fixed one: decode is oblivious
+    assert hdr["eb_abs"] > 0
+    assert search and search["trials"] >= 2
+
+
+def test_psnr_target_constant_field_is_lossless():
+    x = np.full((32, 32), 7.25, np.float32)
+    comp = Compressor(CompressorSpec.from_string("lossy,psnr,60"))
+    y = comp.decompress(comp.compress(x))
+    assert np.array_equal(x, y)
+
+
+# ----------------------------------------------------------- spec validation
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        CompressorSpec(eb_mode="pw_rel", eb=0.0)
+    with pytest.raises(ValueError):
+        CompressorSpec(psnr_target=-1.0)
+    with pytest.raises(ValueError):
+        CompressorSpec(psnr_target=60.0, eb_mode="pw_rel")
