@@ -419,6 +419,31 @@ def run(reps: int = 5, smoke: bool = False, devices: int = 1,
             "cr": compression_ratio(x, buf),
         }
     )
+    # verify-mode overhead: the same end-to-end encode under the runtime
+    # bound-verification ladder. The container must be byte-identical in
+    # every mode (verification is read-only on a clean encode); the CI
+    # gate caps the verify=sample overhead so the default-on guarantee
+    # stays cheap.
+    t_off = None
+    for vmode in ("off", "sample", "full"):
+        vcomp = Compressor(CompressorSpec(eb=1e-3, pipeline="cr", autotune=False, verify=vmode))
+        vbuf = vcomp.compress(x)
+        if vmode == "off":
+            base_buf = vbuf
+        else:
+            assert vbuf == base_buf, f"verify={vmode} changed the container bytes"
+        tv = _best(lambda: vcomp.compress(x), reps)
+        t_off = tv if t_off is None else t_off
+        rows.append(
+            {
+                "stage": f"verify:{vmode}",
+                "verify": vmode,
+                "enc_mbps": x.nbytes / tv / 1e6,
+                "dec_mbps": x.nbytes / td / 1e6,
+                "cr": compression_ratio(x, vbuf),
+                "verify_overhead_pct": max(0.0, (tv / t_off - 1.0) * 100.0),
+            }
+        )
     if "device" in engines:
         # end-to-end decompress-onto-device: decode twins + device
         # reconstruct, result left on device (bit-identity verified)

@@ -12,6 +12,15 @@ MB/s is machine-dependent, CR is not: the synthetic streams are seeded
 and the arithmetic is deterministic, so a CR drop is a real codec
 regression, not noise.
 
+The gate also caps the *verify overhead*: the fresh run's
+``verify:sample`` row (the default-on bound-verification mode) must not
+cost more than ``--max-verify-overhead-pct`` over ``verify:off`` — a
+blown cap means verification regressed from "one decode per encode" to
+something pathological (an accidental repair loop, a quadratic check).
+This is the one timing-derived check in the gate: it compares a *ratio*
+of two timings from the same run on the same machine, so machine speed
+cancels out.
+
 The two JSONs must come from the same grid (same ``smoke`` flag and
 stream sizes); comparing a smoke run against a full run would diff
 different workloads, so that is an error, not a pass. A *dimension*
@@ -58,6 +67,10 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--max-drop-pct", type=float, default=2.0)
+    ap.add_argument("--max-verify-overhead-pct", type=float, default=300.0,
+                    help="cap on the fresh run's verify:sample encode overhead "
+                         "vs verify:off (ratio of same-run timings, so "
+                         "machine-independent); 0 disables the check")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         base = json.load(f)
@@ -89,6 +102,21 @@ def main(argv=None) -> int:
     if skipped_dims:
         print(f"note: dimension(s) {', '.join(skipped_dims)} absent from the fresh run; "
               "their baseline cells were skipped (grid difference, not a regression)")
+    if args.max_verify_overhead_pct > 0:
+        vrows = {r.get("verify"): r for r in fresh.get("stages", []) if "verify" in r}
+        if "sample" in vrows:
+            ovh = float(vrows["sample"].get("verify_overhead_pct", 0.0))
+            if ovh > args.max_verify_overhead_pct:
+                failures.append(
+                    f"verify:sample overhead {ovh:.1f}% exceeds cap "
+                    f"{args.max_verify_overhead_pct:g}% (bound verification "
+                    "should cost ~one decode per encode)")
+            else:
+                print(f"verify gate: sample overhead {ovh:.1f}% "
+                      f"(cap {args.max_verify_overhead_pct:g}%)")
+        else:
+            print("note: fresh run has no verify rows; overhead gate skipped "
+                  "(pre-verify bench grid)")
     kept = compared - len(failures)
     print(f"CR gate: {kept}/{compared} cells within {args.max_drop_pct:g}% of baseline")
     if failures:

@@ -2,9 +2,11 @@
 from .autotune import PredictorPlan, autotune_plan, plan_signature, stats_bucket  # noqa: F401
 from .distributed import chunk_compress, default_mesh, shard_compress, shard_decompress  # noqa: F401
 from .errors import (  # noqa: F401
+    BoundViolationError,
     CheckpointDamageError,
     ContainerError,
     DamageReport,
+    DeadlineExceededError,
     FrameCRCError,
     FrameSyncError,
     RequestTooLargeError,
@@ -35,6 +37,7 @@ from .metrics import (  # noqa: F401
     compression_ratio,
     max_abs_err,
     max_rel_err,
+    nonfinite_count,
     psnr,
     quality_report,
     spectral_error,

@@ -68,6 +68,7 @@ import json
 import struct
 import threading
 import time
+import zlib
 
 import jax.numpy as jnp
 import numpy as np
@@ -75,7 +76,8 @@ import numpy as np
 from . import blocks as blk
 from . import frames as frames_mod
 from . import lorenzo as lor
-from .errors import ContainerError, DamageReport, FrameCRCError, SpecError
+from .errors import BoundViolationError, ContainerError, DamageReport, FrameCRCError, SpecError
+from .retry import RetryPolicy
 from .autotune import (
     DEFAULT_STRIDES,
     PredictorPlan,
@@ -100,7 +102,31 @@ _PREDICTORS = ("interp", "auto", "lorenzo", "offset1d")
 _BACKENDS = ("jax", "pallas")
 _ENGINES = ("auto", "numpy", "device")
 _EB_MODES = ("rel", "abs", "pw_rel")
+_VERIFY_MODES = ("off", "sample", "full")
 _ANCHOR_STRIDES = (4, 8, 16)  # power-of-two strides the 17^ndim block supports
+
+# Bound-verification knobs: "sample" checks at most this many points
+# (deterministic stride sample over the flat field), the repair ladder
+# re-encodes at a halved bound up to `attempts` times before raising
+# BoundViolationError (core/retry.py policy shape: no sleeping — repair
+# is CPU work, not a flaky transport).
+_VERIFY_SAMPLE = 1 << 16
+_REPAIR_POLICY = RetryPolicy(attempts=3, base_delay=0.0, max_delay=0.0, jitter=0.0,
+                             retry_on=(BoundViolationError,))
+_REPAIR_TIGHTEN = 0.5
+# Enforcement slack: quantization guarantees err <= eb in exact arithmetic,
+# but f32 reconstruction rounds — a clean encode can land a point at
+# eb * (1 + few-ulp). The systemwide contract (tests, benches) already
+# allows 1e-4 relative; enforcing tighter here would "repair" correct
+# containers at a real CR cost. Genuine violations (a wrong code is >= 2eb
+# off) clear this slack by orders of magnitude.
+_VERIFY_SLACK = 1e-4
+
+# Test-only fault hook (repro.testing.faults.perturb_quant_codes): called
+# with the quantization-code block batch right after the predictor, before
+# reorder/encode — lets the chaos suite inject a real bound violation that
+# verify= must catch. None in production.
+_CODE_FAULT = None
 
 # ---------------------------------------------------------------- spec grammar
 # Canonical compression-spec string grammar (the single spec entry point
@@ -195,8 +221,17 @@ class CompressorSpec:
     # header like any other, so decode is oblivious. Mutually exclusive
     # with eb_mode="pw_rel" (the search runs in the abs-bound domain).
     psnr_target: float | None = None
+    # Post-compression bound verification: "sample" (default) decodes the
+    # fresh container and checks the error bound on a deterministic point
+    # sample, "full" checks every point, "off" trusts the encoder (the
+    # pre-PR-10 behavior). A violation auto-repairs: re-encode at a
+    # tightened bound under a bounded retry ladder, recorded in
+    # last_telemetry["verify"]; BoundViolationError only when exhausted.
+    verify: str = "sample"
 
     def __post_init__(self):
+        if self.verify not in _VERIFY_MODES:
+            raise ValueError(f"unknown verify mode {self.verify!r}; one of {_VERIFY_MODES}")
         if self.pipeline != "auto" and self.pipeline not in pipelines.PIPELINES:
             raise ValueError(
                 f"unknown pipeline {self.pipeline!r}; registered pipelines: "
@@ -450,7 +485,9 @@ class Compressor:
     def _abs_eb(self, x: np.ndarray) -> float:
         if self.spec.eb_mode == "abs":
             return float(self.spec.eb)
-        rng = float(np.max(x) - np.min(x)) if x.size else 0.0
+        # range in f64: a float32 max-min of an extreme-range field
+        # (|x| near 3e38) overflows to inf and poisons the bound
+        rng = (float(np.max(x)) - float(np.min(x))) if x.size else 0.0
         return float(self.spec.eb) * rng
 
     @staticmethod
@@ -463,13 +500,39 @@ class Compressor:
 
     # -------------------------------------------------------------- compress
     def compress(self, x: np.ndarray) -> bytes:
+        """Compress ``x`` to a v1/v2 container under the spec's bound.
+
+        Two guarantees ride on top of the raw pipeline:
+
+        * **Non-finite-safe ingest** — NaN/±Inf points (masked ocean
+          cells, sensor dropouts, blowups) are detected up front, pulled
+          out into a packed bitmap + exact bit patterns, and replaced
+          with an inert finite fill before prediction; decode restores
+          the original bit patterns exactly. Finite fields pay nothing
+          (one ``isfinite`` scan, unchanged bytes). Fields that are
+          entirely non-finite short-circuit to a trivial container.
+        * **Bound verification** — under ``spec.verify`` ("sample" by
+          default) the fresh container is decoded and checked against
+          the declared bound; a violation re-encodes at a tightened
+          bound (bounded ladder) and raises
+          :class:`~repro.core.errors.BoundViolationError` only when
+          repair is exhausted. See ``last_telemetry["verify"]``.
+        """
         if not self._telemetry_hold:
             self.last_telemetry = None
         self._telemetry()
-        sp = self.spec
         x = np.ascontiguousarray(x, np.float32)
+        fin = np.isfinite(x)
+        if not fin.all():
+            return self._compress_nonfinite(x, fin)
+        return self._compress_finite(x)
+
+    def _compress_finite(self, x: np.ndarray) -> bytes:
+        """The historical compress body: ``x`` is canonical f32, all-finite."""
+        sp = self.spec
         if sp.eb_mode == "pw_rel":
-            return self._compress_pw_rel(x)
+            buf = self._compress_pw_rel(x)
+            return self._verify_repair(x, buf, bound=float(sp.eb), rel=True)
         psnr_hdr = {}
         if sp.psnr_target is not None:
             eb_abs = self._psnr_target_eb(x)
@@ -484,14 +547,152 @@ class Compressor:
             **psnr_hdr,
         }
         if eb_abs == 0.0:  # constant field (or degenerate): store verbatim min
-            return _sections_pack(dict(base_hdr, mode="const"), [np.float32(x.reshape(-1)[0] if x.size else 0).tobytes()])
+            buf = _sections_pack(dict(base_hdr, mode="const"), [np.float32(x.reshape(-1)[0] if x.size else 0).tobytes()])
+            return self._verify_repair(x, buf, bound=0.0, rel=False)
         if sp.predictor in ("interp", "auto"):
-            return self._compress_interp(x, eb_abs, base_hdr)
-        if sp.predictor == "lorenzo":
-            return self._compress_lorenzo(x, eb_abs, base_hdr)
-        if sp.predictor == "offset1d":
-            return self._compress_offset1d(x, eb_abs, base_hdr)
-        raise ValueError(sp.predictor)
+            buf = self._compress_interp(x, eb_abs, base_hdr)
+        elif sp.predictor == "lorenzo":
+            buf = self._compress_lorenzo(x, eb_abs, base_hdr)
+        elif sp.predictor == "offset1d":
+            buf = self._compress_offset1d(x, eb_abs, base_hdr)
+        else:
+            raise ValueError(sp.predictor)
+        return self._verify_repair(x, buf, bound=eb_abs, rel=False)
+
+    # ---------------------------------------------------- non-finite ingest
+    def _compress_nonfinite(self, x: np.ndarray, fin: np.ndarray) -> bytes:
+        """Canonicalization pass for fields carrying NaN/±Inf.
+
+        The non-finite points are recorded as ``[packbits(mask),
+        zlib(u32 bit patterns)]`` sections of an ``"nfsafe"`` wrapper
+        container (mode is the versioned header extension — old readers
+        of *finite* containers are untouched, and a finite field never
+        pays a byte); the field itself, with non-finite points replaced
+        by the median of the finite points, rides the normal path as a
+        complete inner container, so plan caching / engines / verify all
+        apply. Decode restores the exact original bit patterns (NaN
+        payloads included). An entirely non-finite field short-circuits
+        to a trivial ``"nonfinite"`` container of just the patterns.
+        """
+        mask = ~fin
+        n_bad = int(np.count_nonzero(mask))
+        flat = x.reshape(-1)
+        pats = flat.view(np.uint32)[mask.reshape(-1)]
+        tel = self._telemetry()
+        tel["nonfinite"] = {"n": n_bad, "total": int(x.size)}
+        if n_bad == x.size:  # nothing finite to predict from: patterns only
+            header = {"shape": list(x.shape), "mode": "nonfinite", "n_nonfinite": n_bad}
+            return _sections_pack(header, [zlib.compress(pats.tobytes(), 6)])
+        fill = float(np.median(flat[fin.reshape(-1)]))
+        xf = x.copy()
+        xf[mask] = np.float32(fill)
+        ibuf = self._compress_finite(xf)
+        header = {"shape": list(x.shape), "mode": "nfsafe", "n_nonfinite": n_bad,
+                  "fill": fill}
+        return _sections_pack(header, [ibuf, np.packbits(mask.reshape(-1)).tobytes(),
+                                       zlib.compress(pats.tobytes(), 6)])
+
+    def _decompress_nonfinite(self, header, sections, shape) -> np.ndarray:
+        pats = np.frombuffer(zlib.decompress(sections[0]), np.uint32)
+        return pats.copy().view(np.float32).reshape(shape)
+
+    def _decompress_nfsafe(self, header, sections, shape, device: bool = False) -> np.ndarray:
+        ihdr, isec = _sections_unpack(sections[0])
+        y = np.asarray(self._decompress_sections(ihdr, isec, device=device))
+        flat = y.reshape(-1).astype(np.float32).copy()
+        mask = np.unpackbits(np.frombuffer(sections[1], np.uint8), count=flat.size).astype(bool)
+        pats = np.frombuffer(zlib.decompress(sections[2]), np.uint32)
+        flat.view(np.uint32)[mask] = pats  # exact bit patterns, NaN payloads included
+        return flat.reshape(shape)
+
+    # ------------------------------------------------ bound verification
+    def _verify_check(self, x: np.ndarray, buf: bytes, *, bound: float, rel: bool):
+        """Decode ``buf`` and measure the worst error vs the all-finite
+        ``x``: absolute error, or point-wise relative error (``rel=True``,
+        zeros must reconstruct as zeros). Sample mode checks a
+        deterministic ≤``_VERIFY_SAMPLE``-point stride sample. Returns
+        ``(max_err, n_checked)``."""
+        hold, self._telemetry_hold = self._telemetry_hold, True
+        try:
+            y = self.decompress(buf)
+        finally:
+            self._telemetry_hold = hold
+        xf = x.reshape(-1).astype(np.float64)
+        yf = np.asarray(y, np.float64).reshape(-1)
+        if self.spec.verify == "sample" and xf.size > _VERIFY_SAMPLE:
+            idx = np.linspace(0, xf.size - 1, _VERIFY_SAMPLE).astype(np.int64)
+            xf, yf = xf[idx], yf[idx]
+        if not xf.size:
+            return 0.0, 0
+        if rel:
+            nz = xf != 0.0
+            err = float(np.max(np.abs(yf[nz] - xf[nz]) / np.abs(xf[nz]))) if nz.any() else 0.0
+            if np.any(yf[~nz] != 0.0):  # exact-zero contract of pw_rel
+                err = float("inf")
+            return err, int(xf.size)
+        return float(np.max(np.abs(yf - xf))), int(xf.size)
+
+    def _repair_encode(self, x: np.ndarray, eb_new: float, rel: bool) -> bytes:
+        """One rung of the repair ladder: re-encode at a tightened bound.
+
+        Abs-domain repairs pin ``eb_mode="abs"`` (the tightened value IS
+        the new absolute bound, whatever mode derived the original);
+        pw_rel repairs tighten the relative bound. The inner compressor
+        runs ``verify="off"`` — the ladder re-verifies against the
+        *original* bound itself."""
+        sp = self.spec
+        if rel:
+            rspec = dataclasses.replace(sp, eb=float(eb_new), verify="off")
+        else:
+            rspec = dataclasses.replace(sp, eb_mode="abs", eb=float(eb_new),
+                                        psnr_target=None, verify="off")
+        inner = Compressor(rspec, plan_cache=self.plan_cache)
+        buf = inner.compress(x)
+        itel = inner.last_telemetry or {}
+        self._telemetry()["fallbacks"].extend(itel.get("fallbacks") or ())
+        return buf
+
+    def _verify_repair(self, x: np.ndarray, buf: bytes, *, bound: float, rel: bool) -> bytes:
+        """Post-encode bound enforcement (``spec.verify`` != "off").
+
+        Decode-and-check the fresh container; on violation re-encode at a
+        halved bound, re-verify against the ORIGINAL bound, up to
+        ``_REPAIR_POLICY.attempts`` rungs, then raise
+        :class:`BoundViolationError`. The outcome — mode, points checked,
+        worst error, bound, repair count — lands in
+        ``last_telemetry["verify"]`` either way."""
+        sp = self.spec
+        if sp.verify == "off":
+            return buf
+        tel = self._telemetry()
+        max_err, checked = self._verify_check(x, buf, bound=bound, rel=rel)
+        repairs = 0
+        cur = float(bound)
+        limit = bound * (1.0 + _VERIFY_SLACK) + 1e-12  # f32 rounding headroom
+        while max_err > limit:
+            if repairs >= _REPAIR_POLICY.attempts or cur <= 0.0:
+                tel["verify"] = {"mode": sp.verify, "checked": checked,
+                                 "max_err": max_err, "bound": bound, "repairs": repairs}
+                raise BoundViolationError(
+                    f"bound violation survived {repairs} repair(s): max err "
+                    f"{max_err:.6g} > declared bound {bound:.6g} "
+                    f"(verify={sp.verify!r}, {checked} points checked)",
+                    max_err=max_err, bound=bound, repairs=repairs)
+            repairs += 1
+            cur *= _REPAIR_TIGHTEN
+            try:
+                buf = self._repair_encode(x, cur, rel)
+            except ValueError as e:  # tightened bound fell off the codec's range
+                tel["verify"] = {"mode": sp.verify, "checked": checked,
+                                 "max_err": max_err, "bound": bound, "repairs": repairs}
+                raise BoundViolationError(
+                    f"bound violation (max err {max_err:.6g} > {bound:.6g}) and repair "
+                    f"rung {repairs} cannot encode at eb={cur:.6g}: {e}",
+                    max_err=max_err, bound=bound, repairs=repairs) from e
+            max_err, checked = self._verify_check(x, buf, bound=bound, rel=rel)
+        tel["verify"] = {"mode": sp.verify, "checked": checked, "max_err": max_err,
+                         "bound": bound, "repairs": repairs}
+        return buf
 
     def _encode_codes(self, seq, pipeline_override: str | None = None) -> tuple[bytes, dict]:
         """Lossless-encode the code stream; returns (payload, header fields).
@@ -616,7 +817,8 @@ class Compressor:
             return out
         header, sections = _sections_unpack(buf)
         out = dict(header, section_bytes=[len(s) for s in sections])
-        if header.get("mode") == "pw_rel":  # section 0 is a full inner container
+        # wrapper modes: section 0 is a full inner container
+        if header.get("mode") in ("pw_rel", "nfsafe"):
             out["inner"] = Compressor.inspect(bytes(sections[0]))
         if header.get("mode") == "interp" and header.get("predictor") == "auto" and "splines" in header:
             out["pplan"] = {
@@ -642,11 +844,21 @@ class Compressor:
                 from repro.kernels.interp3d import compress_blocks_pallas
 
                 codes_b, outl_b, _ = compress_blocks_pallas(blocks, 2.0 * eb_abs, steps, stride)
-                return codes_b, outl_b
+                return self._maybe_fault_codes(codes_b), outl_b
             except Exception as e:
                 self._record_fallback("predictor", "pallas", "jax", e)
         codes_b, outl_b, _ = compress_blocks(jnp.asarray(blocks), jnp.float32(2.0 * eb_abs), steps, stride)
-        return codes_b, outl_b
+        return self._maybe_fault_codes(codes_b), outl_b
+
+    @staticmethod
+    def _maybe_fault_codes(codes_b):
+        """Apply the chaos-suite code-perturbation hook (module-level
+        ``_CODE_FAULT``, armed by repro.testing.faults.perturb_quant_codes)
+        to the fresh quantization codes. The hook must preserve the
+        code==0 <=> outlier invariant; it never fires in production."""
+        if _CODE_FAULT is None:
+            return codes_b
+        return _CODE_FAULT(np.asarray(codes_b))
 
     def _tune_interp(self, blocks: np.ndarray, eb_abs: float, batch: int, padded_shapes,
                      presampled_of: int | None = None):
@@ -840,20 +1052,25 @@ class Compressor:
         flat = x.reshape(-1)
         zero = flat == 0.0
         nz = ~zero
-        sign = np.signbit(flat) & nz
+        # sign over ALL points (not just nonzero): -0.0 compares equal to
+        # 0.0 and rides the zero bitmap, so its signbit must be recorded
+        # here for the decode side to restore -0.0 bit-exactly
+        sign = np.signbit(flat)
         y64 = np.log(np.abs(flat[nz].astype(np.float64)))
         y32 = y64.astype(np.float32)
         cast_err = float(np.max(np.abs(y64 - y32))) if y32.size else 0.0
         slack = 1.2e-7  # f64->f32 rounding of exp(y') on the way back out
         eb_log = (float(np.log1p(eb)) - cast_err - slack) * (1.0 - 2e-4)
         if eb_log <= 0:
+            worst = float(np.abs(flat[nz].astype(np.float64))[np.argmax(np.abs(y64 - y32))])
             raise ValueError(
-                f"eb={eb:g} is below the float32 pw_rel transform's resolution "
-                f"(log-domain cast error {cast_err:.3g}); use a larger bound or eb_mode='abs'")
+                f"eb={eb:g} is below the float32 pw_rel transform's resolution at "
+                f"|x|={worst:.6g} (log-domain cast error {cast_err:.3g} eats the "
+                f"whole log1p(eb) budget); use a larger bound or eb_mode='abs'")
         fill = float(y32.min()) if y32.size else 0.0  # zero slots: inert filler
         y = np.full(flat.shape, np.float32(fill), np.float32)
         y[nz] = y32
-        inner = Compressor(dataclasses.replace(sp, eb_mode="abs", eb=eb_log),
+        inner = Compressor(dataclasses.replace(sp, eb_mode="abs", eb=eb_log, verify="off"),
                            plan_cache=self.plan_cache)
         ibuf = inner.compress(y.reshape(x.shape))
         itel = inner.last_telemetry or {}
@@ -874,8 +1091,12 @@ class Compressor:
         sign = np.unpackbits(np.frombuffer(sections[1], np.uint8), count=y.size).astype(bool)
         zero = np.unpackbits(np.frombuffer(sections[2], np.uint8), count=y.size).astype(bool)
         out = np.exp(y.reshape(-1).astype(np.float64))
-        out[sign] = -out[sign]
+        # zero first, negate second: a signed zero slot (new containers
+        # record signbit over all points) becomes -0.0 bit-exactly; old
+        # containers never mark a zero slot in `sign`, so the order swap
+        # decodes them identically to before
         out[zero] = 0.0
+        out[sign] = -out[sign]
         return out.astype(np.float32).reshape(shape)
 
     # -------------------------------------------------------- psnr target
@@ -908,14 +1129,14 @@ class Compressor:
         ~uniform within ±eb), so the trials skip both tuners."""
         sp = self.spec
         target = float(sp.psnr_target)
-        rng = float(np.max(x) - np.min(x)) if x.size else 0.0
+        rng = (float(np.max(x)) - float(np.min(x))) if x.size else 0.0
         if rng == 0.0:
             return 0.0  # constant field: verbatim const container, PSNR = inf
         trial = self._psnr_trial_field(x)
         tspec = dataclasses.replace(
             sp, psnr_target=None, eb_mode="abs", eb=1.0,
             predictor="interp" if sp.predictor == "auto" else sp.predictor,
-            pipeline="none", pipeline_candidates=None, autotune=False)
+            pipeline="none", pipeline_candidates=None, autotune=False, verify="off")
         mse_aim = rng * rng * 10.0 ** (-(target + 0.5) / 10.0)
         trials = 0
 
@@ -1064,6 +1285,10 @@ class Compressor:
             return out.reshape(shape) if device else np.asarray(out).reshape(shape)
         if mode == "pw_rel":
             return self._decompress_pw_rel(header, sections, shape, device=device)
+        if mode == "nfsafe":
+            return self._decompress_nfsafe(header, sections, shape, device=device)
+        if mode == "nonfinite":
+            return self._decompress_nonfinite(header, sections, shape)
         raise ValueError(mode)
 
     def _decompress_interp(self, header, sections, shape, device: bool = False) -> np.ndarray:

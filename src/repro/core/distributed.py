@@ -48,6 +48,7 @@ from jax.sharding import PartitionSpec as P
 from . import blocks as blk
 from . import frames
 from .autotune import levels_for_stride, legacy_sample_indices, plan_sample_indices
+from . import compressor as _compressor_mod
 from .compressor import Compressor, CompressorSpec, _sections_pack
 from .predictor import compress_blocks
 from .stencils import build_steps
@@ -287,6 +288,16 @@ def _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp):
     fa = shard_map(body_a, mesh, in_specs=(spec_sharded,), out_specs=(scalar_spec,) * 3)
     mn, mx, samples = jax.jit(fa)(xd)
     mn, mx = np.asarray(mn), np.asarray(mx)
+    # non-finite ingest: NaN/Inf anywhere in a chunk poisons its min/max
+    # (jnp reductions propagate), so this one check covers the whole
+    # field. Raising before the first yield routes the caller onto
+    # chunk_compress, whose per-chunk Compressor.compress runs the
+    # nfsafe canonicalization (bitmap + fill) — recorded as a shard
+    # fallback in last_telemetry, never silent.
+    if not (np.isfinite(mn).all() and np.isfinite(mx).all()):
+        raise ValueError(
+            "non-finite values (NaN/Inf) in the field; the device shard path has no "
+            "nfsafe pass — falling back to chunk_compress for canonicalized ingest")
     samples = np.asarray(samples)
     ns = sample_idx.size if tune else 1
 
@@ -297,7 +308,9 @@ def _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp):
         if sp.eb_mode == "abs":
             eb_abs[i] = float(sp.eb)
         else:
-            eb_abs[i] = float(sp.eb) * float(mx[i] - mn[i])
+            # f64 subtraction: a float32 mx-mn of an extreme-range chunk
+            # overflows to inf and poisons the bound
+            eb_abs[i] = float(sp.eb) * (float(mx[i]) - float(mn[i]))
         if eb_abs[i] == 0.0:
             tuned.append(None)  # constant chunk: framed via the const path
             continue
@@ -379,14 +392,31 @@ def _shard_compress_frames(x, mesh, axis, ndev, k, chunk_shape, comp):
         if use_dev:
             cgrid = blk.scatter_blocks_batch_jnp(jnp.asarray(codes_dev[i]), cb,
                                                  padded_shapes, blk.ANCHOR_STRIDE)
+            if _compressor_mod._CODE_FAULT is not None:
+                # test-only encoder-fault hook (see testing.faults): worth a
+                # device round trip only when armed
+                cgrid = jnp.asarray(comp._maybe_fault_codes(np.asarray(cgrid)))
             oi = np.asarray(jnp.flatnonzero(cgrid.reshape(-1) == 0)).astype(np.int64)
         else:
             cgrid = blk.scatter_blocks_batch(codes_np[i * nblocks : (i + 1) * nblocks],
                                              cb, padded_shapes, blk.ANCHOR_STRIDE)
+            cgrid = comp._maybe_fault_codes(cgrid)
             oi = np.flatnonzero(cgrid.reshape(-1) == 0).astype(np.int64)  # code 0 == outlier
         ov = _gather_flat(padded_shards[i], oi)
-        yield comp._pack_interp(base_hdr, cgrid=cgrid, anc=anc_np[i], oi=oi, ov=ov,
-                                stride=stride, splines=splines, schemes=schemes)
+        fr = comp._pack_interp(base_hdr, cgrid=cgrid, anc=anc_np[i], oi=oi, ov=ov,
+                               stride=stride, splines=splines, schemes=schemes)
+        if sp.verify != "off":
+            # the bound check the host path runs inside compress(): decode
+            # the fresh frame and verify against this chunk's bound; a
+            # violation repairs through the host re-encode ladder (frame
+            # stays a valid standalone container) or raises the typed
+            # BoundViolationError. The chunk slice crosses to host only
+            # under verify — engine residency is unchanged otherwise.
+            sl = tuple(slice(i * k, (i + 1) * k) if d == axis else slice(None)
+                       for d in range(xd.ndim))
+            chunk_host = np.ascontiguousarray(np.asarray(xd[sl]), np.float32)
+            fr = comp._verify_repair(chunk_host, fr, bound=float(eb_abs[i]), rel=False)
+        yield fr
 
 
 def _first_value(xd, i: int, k: int, axis: int) -> float:

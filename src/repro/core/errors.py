@@ -57,6 +57,24 @@ class SpecError(ValueError):
     working."""
 
 
+class BoundViolationError(RuntimeError):
+    """Post-compression bound verification found ``max|x - x_hat|`` above
+    the declared error bound and the auto-repair ladder could not fix it.
+
+    Raised by ``Compressor.compress`` under ``CompressorSpec(verify=
+    "sample"|"full")`` only after the bounded re-encode ladder (tighten
+    eb, re-encode, re-verify) is exhausted — a single violation repairs
+    silently and lands in ``last_telemetry["verify"]["repairs"]``.
+    Carries ``max_err`` / ``bound`` / ``repairs`` for attribution."""
+
+    def __init__(self, msg: str, *, max_err: float = 0.0, bound: float = 0.0,
+                 repairs: int = 0):
+        super().__init__(msg)
+        self.max_err = float(max_err)
+        self.bound = float(bound)
+        self.repairs = int(repairs)
+
+
 class ServiceError(RuntimeError):
     """Base for compression-service (repro.launch.compressd) failures.
 
@@ -79,6 +97,15 @@ class RequestTooLargeError(ServiceError):
 
 class ServiceProtocolError(ServiceError):
     """Malformed request/response framing (bad magic, header, or lengths)."""
+
+
+class DeadlineExceededError(ServiceError):
+    """The request's per-request deadline (``REPRO_COMPRESSD_DEADLINE_MS``
+    / ``CompressdServer(deadline_ms=...)``) elapsed before the daemon
+    finished it — while queued for admission or while executing. The
+    client gets this typed response instead of a hung stream; whether the
+    work completed server-side is indeterminate (the result is
+    discarded)."""
 
 
 @dataclasses.dataclass

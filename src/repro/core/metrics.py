@@ -8,18 +8,71 @@ error over the field's isotropic power spectrum. All metrics are
 numpy-only, accept any-rank float fields, and are defined (finite or an
 explicit ``inf``) on the degenerate inputs a benchmark sweep will hit —
 empty arrays, constant (zero-range) fields, all-zero fields.
+
+Non-finite hygiene: real masked fields (ocean grids, sensor dropouts)
+carry NaN/Inf fill, and a naive mean/max silently poisons every metric to
+NaN. Every metric here instead *masks* points where either field is
+non-finite: the flat metrics (psnr / max_abs_err / max_rel_err /
+value_range) compute over the jointly-finite points only, and the
+structural metrics (ssim / spectral_error) neutralize masked points with
+the finite mean of ``orig`` before windowing/FFT, so they contribute no
+structural difference. ``quality_report`` reports the masked count as
+``n_nonfinite`` (0 for clean pairs) — the masking is observable, never
+silent.
 """
 from __future__ import annotations
 
 import numpy as np
 
 
+def _finite_mask(orig: np.ndarray, recon: np.ndarray) -> np.ndarray:
+    """Jointly-finite mask of a metric pair."""
+    return np.isfinite(orig) & np.isfinite(recon)
+
+
+def nonfinite_count(orig: np.ndarray, recon: np.ndarray | None = None) -> int:
+    """Points excluded by the metrics' non-finite mask: non-finite in
+    ``orig`` or (when given) in ``recon``."""
+    bad = ~np.isfinite(orig)
+    if recon is not None:
+        bad |= ~np.isfinite(recon)
+    return int(np.count_nonzero(bad))
+
+
+def _neutralized_pair(orig: np.ndarray, recon: np.ndarray):
+    """f64 copies of the pair with union-non-finite points replaced by the
+    finite mean of ``orig`` (0.0 when nothing is finite) — keeps the grid
+    structure the windowed/spectral metrics need while the masked points
+    contribute zero structural difference."""
+    a = orig.astype(np.float64)
+    b = recon.astype(np.float64)
+    m = _finite_mask(a, b)
+    if m.all():
+        return a, b
+    fill = float(a[np.isfinite(a)].mean()) if np.isfinite(a).any() else 0.0
+    a = np.where(m, a, fill)
+    b = np.where(m, b, fill)
+    return a, b
+
+
 def value_range(x: np.ndarray) -> float:
-    return float(np.max(x) - np.min(x)) if x.size else 0.0
+    """Dynamic range over the finite points (f64 arithmetic, so extreme
+    float32 fields don't overflow the subtraction to inf); 0.0 when empty
+    or nothing is finite."""
+    if not x.size:
+        return 0.0
+    xf = np.asarray(x, np.float64).reshape(-1)
+    xf = xf[np.isfinite(xf)]
+    return float(xf.max() - xf.min()) if xf.size else 0.0
 
 
 def max_abs_err(a: np.ndarray, b: np.ndarray) -> float:
-    return float(np.max(np.abs(a.astype(np.float64) - b.astype(np.float64)))) if a.size else 0.0
+    if not a.size:
+        return 0.0
+    x = a.astype(np.float64).reshape(-1)
+    y = b.astype(np.float64).reshape(-1)
+    m = _finite_mask(x, y)
+    return float(np.max(np.abs(x[m] - y[m]))) if m.any() else 0.0
 
 
 def max_rel_err(orig: np.ndarray, recon: np.ndarray) -> float:
@@ -27,11 +80,16 @@ def max_rel_err(orig: np.ndarray, recon: np.ndarray) -> float:
     points of ``orig`` — the quantity an ``eb_mode="pw_rel"`` bound
     guarantees. Zero points are excluded from the ratio (a relative bound
     is undefined there); the pw_rel codec stores them exactly, and any
-    zero point reconstructed nonzero counts as ``inf``."""
+    zero point reconstructed nonzero counts as ``inf``. Points where
+    either field is non-finite are masked out."""
     if not orig.size:
         return 0.0
     a = orig.astype(np.float64).reshape(-1)
     b = recon.astype(np.float64).reshape(-1)
+    m = _finite_mask(a, b)
+    a, b = a[m], b[m]
+    if not a.size:
+        return 0.0
     nz = a != 0.0
     worst = 0.0
     if np.any(~nz) and np.any(b[~nz] != 0.0):
@@ -48,7 +106,8 @@ def _psnr_scale(orig: np.ndarray) -> float:
     rng = value_range(orig)
     if rng > 0:
         return rng
-    peak = float(np.max(np.abs(orig))) if orig.size else 0.0
+    fin = orig[np.isfinite(orig)] if orig.size else orig
+    peak = float(np.max(np.abs(fin.astype(np.float64)))) if fin.size else 0.0
     return peak if peak > 0 else 1.0
 
 
@@ -57,9 +116,20 @@ def psnr(orig: np.ndarray, recon: np.ndarray) -> float:
 
     Constant (zero-range) fields normalize by their peak magnitude
     (1.0 when identically zero) instead of the degenerate range, so the
-    result is a defined, finite number whenever ``mse > 0``.
+    result is a defined, finite number whenever ``mse > 0``. The MSE runs
+    over the jointly-finite points (see the module's non-finite hygiene
+    note); an entirely non-finite pair scores ``inf`` (nothing to
+    compare).
     """
-    mse = float(np.mean((orig.astype(np.float64) - recon.astype(np.float64)) ** 2)) if orig.size else 0.0
+    if not orig.size:
+        return float("inf")
+    a = orig.astype(np.float64).reshape(-1)
+    b = recon.astype(np.float64).reshape(-1)
+    m = _finite_mask(a, b)
+    if not m.any():
+        return float("inf")
+    d = a[m] - b[m]
+    mse = float(np.mean(d * d))
     if mse == 0.0:
         return float("inf")
     return 20.0 * np.log10(_psnr_scale(orig)) - 10.0 * np.log10(mse)
@@ -108,8 +178,7 @@ def ssim(orig: np.ndarray, recon: np.ndarray, *, window: int = 7) -> float:
         raise ValueError(f"shape mismatch: {orig.shape} vs {recon.shape}")
     if orig.size == 0:
         return 1.0
-    a = orig.astype(np.float64)
-    b = recon.astype(np.float64)
+    a, b = _neutralized_pair(orig, recon)
     win = max(1, min(int(window), *a.shape))
     L = _psnr_scale(orig)
     c1 = (0.01 * L) ** 2
@@ -161,8 +230,9 @@ def spectral_error(orig: np.ndarray, recon: np.ndarray, *, nbins: int = 32) -> f
         raise ValueError(f"shape mismatch: {orig.shape} vs {recon.shape}")
     if orig.size <= 1:
         return 0.0
-    sa = _radial_spectrum(orig, nbins)
-    sb = _radial_spectrum(recon, nbins)
+    a, b = _neutralized_pair(orig, recon)
+    sa = _radial_spectrum(a, nbins)
+    sb = _radial_spectrum(b, nbins)
     floor = float(sa.max()) * 1e-20 if sa.size and sa.max() > 0 else 0.0
     keep = sa > floor
     if not np.any(keep):
@@ -175,13 +245,16 @@ def spectral_error(orig: np.ndarray, recon: np.ndarray, *, nbins: int = 32) -> f
 def quality_report(orig: np.ndarray, recon: np.ndarray, compressed: bytes | None = None) -> dict:
     """All quality metrics of one (field, reconstruction) pair in one dict —
     the row schema ``bench_lossless --metrics`` records and the CI io lane
-    gates on. ``compressed`` adds the rate columns (cr, bit_rate)."""
+    gates on. ``compressed`` adds the rate columns (cr, bit_rate).
+    ``n_nonfinite`` counts the points the non-finite mask excluded from
+    the flat metrics (union over both fields; 0 for clean pairs)."""
     out = {
         "psnr": psnr(orig, recon),
         "ssim": ssim(orig, recon),
         "spectral_error": spectral_error(orig, recon),
         "max_abs_err": max_abs_err(orig, recon),
         "max_rel_err": max_rel_err(orig, recon),
+        "n_nonfinite": nonfinite_count(orig, recon),
     }
     if compressed is not None:
         out["cr"] = compression_ratio(orig, compressed)

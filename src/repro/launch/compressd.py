@@ -32,6 +32,11 @@ typed exception from :mod:`repro.core.errors`). Ops:
 ``stats``
     per-stream telemetry (CR, MB/s, request counts), queue depth,
     in-flight bytes, plan-cache hit rate, totals.
+``health``
+    cheap liveness + load snapshot (draining flag, in-flight bytes,
+    queued admissions). Like ``stats`` it bypasses admission entirely,
+    so a supervisor's probe succeeds even when the daemon is saturated
+    or mid-drain.
 ``ping`` / ``shutdown``
     liveness / orderly remote stop.
 ``sleep``
@@ -50,40 +55,68 @@ socket, so queued and rejected requests never buffer bytes.
 * queue at its depth cap -> immediate
   :class:`repro.core.errors.ServiceOverloadedError` (load shed).
 
-Zero-payload control ops (stats/ping/shutdown) bypass admission and run
-on the connection thread, so observability stays responsive under load.
-Per-request faults (bad spec, damaged container, engine failure past the
-compressor's own fallback ladder) become typed error responses; the
-worker pool and the other streams are untouched.
+Zero-payload control ops (stats/ping/health/shutdown) bypass admission
+and run on the connection thread, so observability stays responsive
+under load. Per-request faults (bad spec, damaged container, engine
+failure past the compressor's own fallback ladder) become typed error
+responses; the worker pool and the other streams are untouched.
+
+Survivability — the daemon also *exits* cleanly and refuses to wedge:
+
+* **deadlines** — ``deadline_ms`` (``REPRO_COMPRESSD_DEADLINE_MS``)
+  bounds each request from admission through handler completion; a
+  request that blows its budget gets a typed
+  :class:`repro.core.errors.DeadlineExceededError` response and its
+  in-flight byte reservation is released only once the straggling worker
+  actually finishes (a done-callback), so the admission ledger never
+  leaks capacity;
+* **idle reaping** — a connection silent for ``idle_s``
+  (``REPRO_COMPRESSD_IDLE_S``) is closed, so leaked client sockets do
+  not pin connection threads forever;
+* **graceful drain** — SIGTERM (or :meth:`CompressdServer.drain`) stops
+  accepting: the listener closes (unix socket unlinked immediately, so
+  restarts can rebind), new requests on live connections shed with
+  ``ServiceOverloadedError``, in-flight requests run to completion up to
+  ``REPRO_COMPRESSD_DRAIN_S``, then the daemon closes;
+* **stale sockets** — binding a unix path that exists probes it first:
+  a dead owner's leftover socket is unlinked and replaced, a live
+  daemon's socket raises instead of hijacking it.
 
 Env knobs (flags win): ``REPRO_COMPRESSD_WORKERS``,
 ``REPRO_COMPRESSD_QUEUE_DEPTH``, ``REPRO_COMPRESSD_MAX_REQUEST_MB``,
 ``REPRO_COMPRESSD_INFLIGHT_MB``, ``REPRO_COMPRESSD_PLANS`` (plan-cache
-entries). Clients: :class:`CompressdClient` here, ``serve --compressd
-ADDR`` for KV paging, ``REPRO_COMPRESSD`` for the checkpoint codec.
+entries), ``REPRO_COMPRESSD_DEADLINE_MS`` (0 = no deadline),
+``REPRO_COMPRESSD_IDLE_S``, ``REPRO_COMPRESSD_DRAIN_S``. Clients:
+:class:`CompressdClient` here (opt-in bounded retry via ``retries=``),
+``serve --compressd ADDR`` for KV paging, ``REPRO_COMPRESSD`` for the
+checkpoint codec.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import signal
 import socket
 import struct
 import threading
 import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 import numpy as np
 
 from repro.core import errors as _errors
 from repro.core import Compressor, CompressorSpec, PlanCache
 from repro.core.errors import (
+    DeadlineExceededError,
     RequestTooLargeError,
     ServiceError,
     ServiceOverloadedError,
     ServiceProtocolError,
     SpecError,
 )
+from repro.core.retry import RetryPolicy, retry_call
 from repro.core.serial import pack_obj, unpack_obj
 
 MAGIC = b"CPD1"
@@ -97,14 +130,27 @@ _DRAIN_CHUNK = 1 << 16
 _SPEC_KEYS = frozenset({
     "eb", "eb_mode", "predictor", "pipeline", "anchor_stride", "autotune",
     "reorder", "backend", "engine", "splines", "schemes",
-    "pipeline_candidates", "plan_anchor_strides", "psnr_target",
+    "pipeline_candidates", "plan_anchor_strides", "psnr_target", "verify",
 })
+
+# zero-payload ops served on the connection thread, bypassing admission
+_CONTROL_OPS = ("stats", "ping", "health", "shutdown")
 
 
 def _env_int(name: str, default: int) -> int:
     try:
         v = int(os.environ.get(name, ""))
         return v if v > 0 else default
+    except ValueError:
+        return default
+
+
+def _env_nonneg(name: str, default: float) -> float:
+    """Like :func:`_env_int` but float-valued and 0 is a legal setting
+    (0 disables the knob rather than falling back to the default)."""
+    try:
+        v = float(os.environ.get(name, ""))
+        return v if v >= 0 else default
     except ValueError:
         return default
 
@@ -187,8 +233,17 @@ class CompressdServer:
     def __init__(self, addr: str = "127.0.0.1:0", *, workers: int | None = None,
                  queue_depth: int | None = None, max_request_bytes: int | None = None,
                  max_inflight_bytes: int | None = None, plan_cache: PlanCache | None = None,
-                 plan_cache_entries: int | None = None, allow_shutdown: bool = True):
+                 plan_cache_entries: int | None = None, allow_shutdown: bool = True,
+                 deadline_ms: float | None = None, idle_s: float | None = None,
+                 drain_s: float | None = None):
         self.workers = workers if workers is not None else default_workers()
+        # survivability knobs; 0 disables (no deadline / no idle reaping)
+        self.deadline_ms = (float(deadline_ms) if deadline_ms is not None
+                            else _env_nonneg("REPRO_COMPRESSD_DEADLINE_MS", 0.0))
+        self.idle_s = (float(idle_s) if idle_s is not None
+                       else _env_nonneg("REPRO_COMPRESSD_IDLE_S", 300.0))
+        self.drain_s = (float(drain_s) if drain_s is not None
+                        else _env_nonneg("REPRO_COMPRESSD_DRAIN_S", 30.0))
         self.queue_depth = (queue_depth if queue_depth is not None
                             else _env_int("REPRO_COMPRESSD_QUEUE_DEPTH", 32))
         self.max_request_bytes = (max_request_bytes if max_request_bytes is not None
@@ -208,6 +263,8 @@ class CompressdServer:
         if self._family == socket.AF_INET:
             self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._unix_path = sockaddr if self._family == socket.AF_UNIX else None
+        if self._unix_path and os.path.exists(self._unix_path):
+            self._reclaim_stale_socket(self._unix_path)
         self._listener.bind(sockaddr)
         self._listener.listen(128)
         # periodic accept timeout: closing the listener from another thread
@@ -227,6 +284,8 @@ class CompressdServer:
         self._cv = threading.Condition()
         self._inflight_bytes = 0
         self._queued = 0
+        self._draining = threading.Event()
+        self._drain_lock = threading.Lock()  # serializes concurrent drain() calls
 
         # telemetry (single lock; all counters are cheap increments)
         self._tlock = threading.Lock()
@@ -234,6 +293,8 @@ class CompressdServer:
         self._streams: dict[str, dict] = {}
         self._rejected_overload = 0
         self._rejected_oversize = 0
+        self._deadline_exceeded = 0
+        self._idle_reaped = 0
         self._errors = 0
 
         # one Compressor per canonical spec, all sharing the plan cache;
@@ -243,6 +304,28 @@ class CompressdServer:
         self._comp_lock = threading.Lock()
 
     # ------------------------------------------------------------ lifecycle
+    @staticmethod
+    def _reclaim_stale_socket(path: str) -> None:
+        """A unix socket path left behind by a dead daemon (SIGKILL, OOM)
+        would make every restart fail with EADDRINUSE. Probe it: nobody
+        answering -> unlink and rebind; a live daemon -> raise rather than
+        hijack its address."""
+        probe = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        probe.settimeout(0.5)
+        try:
+            probe.connect(path)
+        except (ConnectionRefusedError, ConnectionResetError, socket.timeout,
+                FileNotFoundError):
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                pass
+        else:
+            raise OSError(
+                f"unix socket {path!r} has a live daemon; refusing to replace it")
+        finally:
+            probe.close()
+
     @property
     def address(self) -> str:
         if self._family == socket.AF_UNIX:
@@ -258,6 +341,32 @@ class CompressdServer:
 
     def serve_forever(self) -> None:
         self._accept_loop()
+
+    def drain(self, budget_s: float | None = None) -> None:
+        """Graceful stop: quit accepting (listener closed, unix socket
+        unlinked so a successor can bind immediately), shed new requests
+        on live connections, let in-flight work finish for up to
+        ``budget_s`` (default ``drain_s``), then close. Idempotent; a
+        second concurrent call blocks until the first finishes."""
+        with self._drain_lock:
+            if self._closing.is_set():
+                return
+            self._draining.set()
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            if self._unix_path:
+                try:
+                    os.unlink(self._unix_path)
+                except OSError:
+                    pass
+            budget = self.drain_s if budget_s is None else float(budget_s)
+            deadline = time.monotonic() + budget
+            with self._cv:
+                while self._inflight_bytes > 0 and time.monotonic() < deadline:
+                    self._cv.wait(0.05)
+            self.close()
 
     def close(self) -> None:
         if self._closing.is_set():
@@ -309,6 +418,11 @@ class CompressdServer:
                 break  # listener closed
             if self._family == socket.AF_INET:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if self.idle_s > 0:
+                # a connection silent past idle_s raises socket.timeout in
+                # _read_prefix and gets reaped (leaked clients can't pin
+                # connection threads forever)
+                conn.settimeout(self.idle_s)
             with self._conn_lock:
                 self._conns.add(conn)
                 t = threading.Thread(target=self._serve_conn, args=(conn,),
@@ -317,10 +431,18 @@ class CompressdServer:
             t.start()
 
     # ------------------------------------------------------------ admission
-    def _admit(self, payload_len: int) -> None:
+    def _admit(self, payload_len: int, deadline: float | None = None) -> None:
         """Reserve ``payload_len`` in-flight bytes, queueing up to the
         depth cap. Raises the typed rejection errors; on return the bytes
-        are reserved and MUST be released via :meth:`_release`."""
+        are reserved and MUST be released via :meth:`_release`.
+        ``deadline`` (``time.monotonic()`` instant) bounds the queue wait:
+        a request cannot burn its whole budget waiting for admission."""
+        if self._draining.is_set():
+            with self._tlock:
+                self._rejected_overload += 1
+            raise ServiceOverloadedError(
+                "server is draining: finishing in-flight requests, not "
+                "accepting new work")
         if payload_len > self.max_request_bytes:
             with self._tlock:
                 self._rejected_oversize += 1
@@ -338,8 +460,14 @@ class CompressdServer:
                 self._queued += 1
                 try:
                     while self._inflight_bytes + payload_len > self.max_inflight_bytes:
-                        if self._closing.is_set():
+                        if self._closing.is_set() or self._draining.is_set():
                             raise ServiceError("server shutting down")
+                        if deadline is not None and time.monotonic() >= deadline:
+                            with self._tlock:
+                                self._deadline_exceeded += 1
+                            raise DeadlineExceededError(
+                                f"request deadline ({self.deadline_ms:g} ms) expired "
+                                f"while queued for admission")
                         self._cv.wait(0.05)
                 finally:
                     self._queued -= 1
@@ -356,13 +484,17 @@ class CompressdServer:
             while not self._closing.is_set():
                 try:
                     header, plen = _read_prefix(sock)
+                except socket.timeout:
+                    with self._tlock:
+                        self._idle_reaped += 1
+                    break  # idle connection reaped
                 except (ConnectionError, OSError):
                     break
                 except ServiceProtocolError as e:
                     self._send_error(sock, e)
                     break  # framing is lost; the connection cannot recover
                 op = str(header.get("op", ""))
-                if plen == 0 and op in ("stats", "ping", "shutdown"):
+                if plen == 0 and op in _CONTROL_OPS:
                     # control ops bypass admission and the pool: they must
                     # stay responsive exactly when the daemon is saturated
                     self._respond(sock, *self._handle_control(op))
@@ -370,8 +502,10 @@ class CompressdServer:
                         self.close()
                         break
                     continue
+                deadline = (time.monotonic() + self.deadline_ms / 1e3
+                            if self.deadline_ms > 0 else None)
                 try:
-                    self._admit(plen)
+                    self._admit(plen, deadline)
                 except ServiceError as e:
                     try:
                         _drain(sock, plen)
@@ -379,17 +513,36 @@ class CompressdServer:
                         continue
                     except (ConnectionError, OSError):
                         break
+                # bytes are reserved from here; released on the normal path
+                # below, or by the done-callback when a deadline strands the
+                # worker (releasing early would lie to admission control —
+                # the straggler still holds memory until it finishes)
+                released = False
                 try:
                     payload = _recv_exact(sock, plen)
+                    fut = self._pool.submit(self._handle, header, payload)
                     try:
-                        fut = self._pool.submit(self._handle, header, payload)
-                        rh, rp = fut.result()
+                        budget = (None if deadline is None
+                                  else max(0.0, deadline - time.monotonic()))
+                        rh, rp = fut.result(timeout=budget)
+                    except FutureTimeoutError:
+                        fut.cancel()  # still queued -> never runs
+                        fut.add_done_callback(
+                            lambda f, n=plen: self._reap_stranded(f, n))
+                        released = True
+                        with self._tlock:
+                            self._deadline_exceeded += 1
+                        e = DeadlineExceededError(
+                            f"request exceeded its {self.deadline_ms:g} ms deadline "
+                            f"(op {op!r}, {plen} B payload)")
+                        rh, rp = self._error_response(e), b""
                     except ServiceError as e:
                         rh, rp = self._error_response(e), b""
                     except Exception as e:  # degrade, never die
                         rh, rp = self._error_response(e), b""
                 finally:
-                    self._release(plen)
+                    if not released:
+                        self._release(plen)
                 if not self._respond(sock, rh, rp):
                     break
         finally:
@@ -399,6 +552,17 @@ class CompressdServer:
                 sock.close()
             except OSError:
                 pass
+
+    def _reap_stranded(self, fut, payload_len: int) -> None:
+        """Done-callback for a worker that outlived its request's deadline:
+        release the in-flight reservation now that the bytes are truly free,
+        and swallow the orphaned result/exception (the error response was
+        already sent)."""
+        try:
+            if not fut.cancelled():
+                fut.exception()
+        finally:
+            self._release(payload_len)
 
     def _respond(self, sock, header: dict, payload: bytes) -> bool:
         try:
@@ -470,6 +634,18 @@ class CompressdServer:
     def _handle_control(self, op: str) -> tuple[dict, bytes]:
         if op == "ping":
             return {"ok": True, "pong": True}, b""
+        if op == "health":
+            with self._cv:
+                inflight, queued = self._inflight_bytes, self._queued
+            return {
+                "ok": True,
+                "healthy": not self._closing.is_set(),
+                "draining": self._draining.is_set(),
+                "inflight_bytes": inflight,
+                "queued": queued,
+                "deadline_ms": self.deadline_ms,
+                "uptime_s": time.time() - self._t0,
+            }, b""
         if op == "shutdown":
             if not self.allow_shutdown:
                 return self._error_response(ServiceError("remote shutdown disabled")), b""
@@ -564,9 +740,12 @@ class CompressdServer:
                     totals[k] += rec[k]
             queue["rejected_overload"] = self._rejected_overload
             queue["rejected_oversize"] = self._rejected_oversize
+            queue["deadline_exceeded"] = self._deadline_exceeded
+            queue["idle_reaped"] = self._idle_reaped
         return {
             "uptime_s": time.time() - self._t0,
             "workers": self.workers,
+            "draining": self._draining.is_set(),
             "queue": queue,
             "plan_cache": self.plan_cache.stats(),
             "streams": streams,
@@ -584,12 +763,23 @@ class CompressdClient:
     :mod:`repro.core.errors` (falling back to :class:`ServiceError`).
     ``last_info`` keeps the most recent response header (CR, MB/s,
     plan-cache outcome) for observability.
+
+    ``retries`` opts into bounded retry with exponential backoff on
+    *transient* failures — load shed (``ServiceOverloadedError``) and
+    broken connections (daemon restarting, drain-window races). Default
+    0: callers that want to see backpressure (and the tests that assert
+    it) see the raw typed errors. Deadline expiries and protocol/spec
+    errors never retry — resending the identical request would just burn
+    another deadline.
     """
 
-    def __init__(self, addr: str, *, timeout: float = 120.0, stream: str | None = None):
+    def __init__(self, addr: str, *, timeout: float = 120.0, stream: str | None = None,
+                 retries: int = 0, retry_backoff_s: float = 0.05):
         self.addr = addr
         self.timeout = timeout
         self.stream = stream
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         self.last_info: dict | None = None
         self._sock: socket.socket | None = None
 
@@ -606,7 +796,18 @@ class CompressdClient:
         return self._sock
 
     def request(self, header: dict, payload: bytes = b"") -> tuple[dict, bytes]:
-        """One request/response exchange; raises the daemon's typed error."""
+        """One request/response exchange; raises the daemon's typed error.
+        With ``retries > 0``, shed/connection failures re-send the request
+        (it lives entirely in this frame, so a resend is safe) after
+        exponential backoff; other errors raise immediately."""
+        if self.retries <= 0:
+            return self._request_once(header, payload)
+        policy = RetryPolicy(
+            attempts=self.retries + 1, base_delay=self.retry_backoff_s,
+            retry_on=(ServiceOverloadedError, ConnectionError, OSError))
+        return retry_call(lambda: self._request_once(header, payload), policy=policy)
+
+    def _request_once(self, header: dict, payload: bytes = b"") -> tuple[dict, bytes]:
         sock = self._connect()
         try:
             sock.sendall(pack_frame(header, payload))
@@ -697,6 +898,10 @@ class CompressdClient:
         rh, _ = self.request({"op": "stats"})
         return rh
 
+    def health(self) -> dict:
+        rh, _ = self.request({"op": "health"})
+        return rh
+
     def ping(self) -> bool:
         rh, _ = self.request({"op": "ping"})
         return bool(rh.get("pong"))
@@ -738,6 +943,15 @@ def main(argv=None) -> int:
                     help="LRU plan cache capacity (field signatures)")
     ap.add_argument("--no-remote-shutdown", action="store_true",
                     help="ignore shutdown requests from clients")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline in ms (0 = none; "
+                         "default REPRO_COMPRESSD_DEADLINE_MS)")
+    ap.add_argument("--idle-s", type=float, default=None,
+                    help="reap connections idle this long (0 = never; "
+                         "default REPRO_COMPRESSD_IDLE_S or 300)")
+    ap.add_argument("--drain-s", type=float, default=None,
+                    help="SIGTERM drain budget for in-flight requests "
+                         "(default REPRO_COMPRESSD_DRAIN_S or 30)")
     args = ap.parse_args(argv)
     server = CompressdServer(
         args.addr,
@@ -747,15 +961,34 @@ def main(argv=None) -> int:
         max_inflight_bytes=None if args.max_inflight_mb is None else args.max_inflight_mb << 20,
         plan_cache_entries=args.plan_cache_entries,
         allow_shutdown=not args.no_remote_shutdown,
+        deadline_ms=args.deadline_ms,
+        idle_s=args.idle_s,
+        drain_s=args.drain_s,
     )
+
+    # SIGTERM (the supervisor's stop signal) drains instead of dying
+    # mid-request: the handler fires in the main thread, which is blocked
+    # inside serve_forever, so the drain runs on a helper thread and
+    # serve_forever returns once the listener closes.
+    def _on_sigterm(signum, frame):
+        threading.Thread(target=server.drain, name="compressd-drain",
+                         daemon=True).start()
+
+    try:
+        signal.signal(signal.SIGTERM, _on_sigterm)
+    except ValueError:
+        pass  # not the main thread (embedded use); drain() is still callable
     print(f"compressd listening on {server.address} "
-          f"(workers={server.workers}, queue_depth={server.queue_depth})", flush=True)
+          f"(workers={server.workers}, queue_depth={server.queue_depth}, "
+          f"deadline_ms={server.deadline_ms:g})", flush=True)
     try:
         server.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
-        server.close()
+        # second drain() call waits for an in-progress SIGTERM drain, then
+        # no-ops; a plain Ctrl-C with nothing in flight closes immediately
+        server.drain()
     return 0
 
 

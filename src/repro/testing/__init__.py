@@ -1,4 +1,6 @@
-"""repro.testing — deterministic fault injection for the chaos suite."""
+"""repro.testing — deterministic fault injection + adversarial inputs
+for the chaos suite."""
+from .adversarial import CORPUS, corpus_field  # noqa: F401
 from .faults import (  # noqa: F401
     FlakyFile,
     bit_flip,
@@ -6,6 +8,7 @@ from .faults import (  # noqa: F401
     drop_frame,
     fault_rng,
     fault_seed,
+    perturb_quant_codes,
     torn_tail,
     truncate_fraction,
 )

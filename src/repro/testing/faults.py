@@ -20,6 +20,7 @@ result to :func:`fault_rng` / hypothesis / your own sampler.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 import numpy as np
@@ -86,6 +87,54 @@ def drop_frame(buf: bytes, index: int) -> bytes:
     table, prefix = _v3_table(buf)
     off, size, _ = table[index]
     return bytes(buf[: off - prefix]) + bytes(buf[off + size :])
+
+
+# ----------------------------------------------------------- encoder fault
+@contextlib.contextmanager
+def perturb_quant_codes(*, n_calls: int = 1, delta: int = 5, frac: float = 0.01,
+                        seed: int | None = None):
+    """Arm the compressor's quantization-code fault hook for a ``with``
+    block: the first ``n_calls`` predictor runs get ``frac`` of their
+    *nonzero* codes shifted by ±``delta`` (clipped into [1, 255] so the
+    code==0 <=> outlier invariant survives), after which the hook
+    disarms. Each perturbed code lands the reconstruction ``delta * 2eb``
+    away from its point — a genuine silent bound violation of the kind a
+    predictor/engine bug would produce, which ``CompressorSpec(verify=
+    "sample")`` must catch and repair (the repair re-encode runs after
+    the hook disarms, so it is clean). Deterministic under
+    :func:`fault_seed`; yields a stats dict (``calls``, ``perturbed``).
+    """
+    from repro.core import compressor as _comp
+
+    rng = fault_rng(seed)
+    stats = {"calls": 0, "perturbed": 0}
+
+    def hook(codes: np.ndarray) -> np.ndarray:
+        if stats["calls"] >= n_calls:
+            return codes
+        stats["calls"] += 1
+        flat = codes.reshape(-1).copy()
+        nz = np.flatnonzero(flat != 0)
+        if nz.size == 0:
+            return codes
+        k = max(1, int(nz.size * frac))
+        pick = rng.choice(nz, size=min(k, nz.size), replace=False)
+        shift = np.where(rng.random(pick.size) < 0.5, -delta, delta).astype(np.int32)
+        moved = np.clip(flat[pick].astype(np.int32) + shift, 1, 255)
+        # a shift that lands back on the original value would be a no-op;
+        # push those to the other side
+        same = moved == flat[pick]
+        moved[same] = np.clip(flat[pick][same].astype(np.int32) - shift[same], 1, 255)
+        flat[pick] = moved.astype(codes.dtype)
+        stats["perturbed"] += int(np.count_nonzero(flat != codes.reshape(-1)))
+        return flat.reshape(codes.shape)
+
+    prev = _comp._CODE_FAULT
+    _comp._CODE_FAULT = hook
+    try:
+        yield stats
+    finally:
+        _comp._CODE_FAULT = prev
 
 
 # ------------------------------------------------------------------- I/O

@@ -370,3 +370,206 @@ def test_legacy_spec_kwargs_deprecated_but_equivalent(server):
         assert len(legacy) == len(modern)  # same spec through either surface
         with pytest.raises(TypeError, match="not both"):
             c.compress(x, spec="lossy,abs,1e-3", eb=1e-3)
+
+
+# ------------------------------------------------------------ survivability
+def test_deadline_exceeded_typed_and_bytes_released():
+    from repro.core.errors import DeadlineExceededError
+
+    with CompressdServer("127.0.0.1:0", workers=1, deadline_ms=150).start() as srv:
+        with CompressdClient(srv.address) as c:
+            t0 = time.monotonic()
+            with pytest.raises(DeadlineExceededError):
+                c.request({"op": "sleep", "seconds": 3.0}, b"x" * 256)
+            assert time.monotonic() - t0 < 2.0  # responded at the deadline, not after
+            assert c.ping()  # connection framing survived
+            # the stranded worker's reservation drains once the sleep ends
+            for _ in range(100):
+                q = c.stats()["queue"]
+                if q["inflight_bytes"] == 0:
+                    break
+                time.sleep(0.1)
+            assert q["inflight_bytes"] == 0
+            assert q["deadline_exceeded"] >= 1
+
+
+def test_deadline_off_by_default(server):
+    assert server.deadline_ms == 0.0
+    with CompressdClient(server.address) as c:
+        rh, _ = c.request({"op": "sleep", "seconds": 0.2}, b"y" * 16)
+        assert rh["ok"]
+
+
+def test_health_op_bypasses_admission(server):
+    with CompressdClient(server.address) as c:
+        h = c.health()
+        assert h["healthy"] and not h["draining"]
+        assert "inflight_bytes" in h and "queued" in h
+
+
+def test_drain_finishes_inflight_sheds_new():
+    srv = CompressdServer("127.0.0.1:0", workers=2, drain_s=15).start()
+    slow = CompressdClient(srv.address)
+    probe = CompressdClient(srv.address)
+    probe.ping()  # connection established before the drain begins
+    done = {}
+
+    def run_slow():
+        done["resp"] = slow.request({"op": "sleep", "seconds": 1.0}, b"z" * 64)
+
+    t = threading.Thread(target=run_slow)
+    t.start()
+    time.sleep(0.3)  # the slow request is in flight
+    drainer = threading.Thread(target=srv.drain)
+    drainer.start()
+    time.sleep(0.3)
+    # new work on a live connection is shed while draining...
+    with pytest.raises(ServiceOverloadedError):
+        probe.request({"op": "sleep", "seconds": 0.1}, b"w" * 16)
+    # ...but health still answers, reporting the drain
+    assert probe.health()["draining"]
+    t.join(timeout=10)
+    drainer.join(timeout=10)
+    # the in-flight request completed during the drain window
+    assert done["resp"][0]["ok"]
+    # and the daemon is fully closed: new connections are refused
+    with pytest.raises((ConnectionError, OSError)):
+        CompressdClient(srv.address).ping()
+    slow.close()
+    probe.close()
+
+
+def test_drain_unlinks_unix_socket(tmp_path):
+    import os
+
+    path = str(tmp_path / "drain.sock")
+    srv = CompressdServer(f"unix:{path}").start()
+    wait_ready(srv.address, timeout=10)
+    srv.drain()
+    assert not os.path.exists(path)
+
+
+@pytest.mark.timeout(120)
+def test_sigterm_drains_under_load():
+    """SIGTERM to the CLI daemon with a request in flight: the in-flight
+    request completes, new work is shed, and the process exits cleanly."""
+    import signal as _signal
+
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.compressd", "--addr", "127.0.0.1:0",
+         "--workers", "2", "--drain-s", "20"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    try:
+        line = proc.stdout.readline()
+        assert "compressd listening on " in line, line
+        addr = line.split("compressd listening on ")[1].split()[0]
+        wait_ready(addr, timeout=60)
+        inflight = {}
+
+        def slow_request():
+            with CompressdClient(addr) as c:
+                rh, _ = c.request({"op": "sleep", "seconds": 1.5}, b"x" * 64)
+                inflight["rh"] = rh
+
+        t = threading.Thread(target=slow_request)
+        t.start()
+        time.sleep(0.4)  # the sleep is in flight on a worker
+        proc.send_signal(_signal.SIGTERM)
+        t.join(timeout=30)
+        assert inflight["rh"]["ok"]  # in-flight work finished during the drain
+        assert proc.wait(timeout=30) == 0
+        with pytest.raises((ConnectionError, OSError)):
+            CompressdClient(addr).ping()  # daemon is gone, not wedged
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+
+
+def test_stale_unix_socket_reclaimed(tmp_path):
+    import os
+
+    path = str(tmp_path / "stale.sock")
+    # a dead daemon's leftover: bound once, never unlinked
+    leftover = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    leftover.bind(path)
+    leftover.close()
+    assert os.path.exists(path)
+    with CompressdServer(f"unix:{path}").start() as srv:
+        wait_ready(srv.address, timeout=10)
+        with CompressdClient(srv.address) as c:
+            assert c.ping()
+
+
+def test_live_unix_socket_not_hijacked(tmp_path):
+    path = str(tmp_path / "live.sock")
+    with CompressdServer(f"unix:{path}").start() as srv:
+        wait_ready(srv.address, timeout=10)
+        with pytest.raises(OSError, match="live daemon"):
+            CompressdServer(f"unix:{path}")
+        with CompressdClient(srv.address) as c:
+            assert c.ping()  # the incumbent is untouched
+
+
+def test_idle_connection_reaped():
+    with CompressdServer("127.0.0.1:0", idle_s=0.3).start() as srv:
+        c = CompressdClient(srv.address)
+        assert c.ping()
+        time.sleep(0.9)
+        with pytest.raises((ConnectionError, OSError)):
+            c.ping()
+        c.close()
+        with CompressdClient(srv.address) as c2:  # daemon itself is fine
+            assert c2.stats()["queue"]["idle_reaped"] >= 1
+
+
+def test_client_retry_rides_out_restart_window():
+    """A client with retries enabled survives transient connection loss:
+    first attempt hits a dead port, the daemon 'comes back' before the
+    retry (simulated by binding the listener between attempts)."""
+    srv = CompressdServer("127.0.0.1:0").start()
+    addr = srv.address
+    srv.close()  # daemon gone: first attempt gets ECONNREFUSED
+    revived = {}
+
+    def revive():
+        time.sleep(0.3)
+        host, port = addr.rsplit(":", 1)
+        revived["srv"] = CompressdServer(f"{host}:{port}").start()
+
+    threading.Thread(target=revive).start()
+    try:
+        c = CompressdClient(addr, retries=8, retry_backoff_s=0.2)
+        assert c.ping()  # retried through the dead window
+        c.close()
+    finally:
+        for _ in range(50):
+            if "srv" in revived:
+                break
+            time.sleep(0.1)
+        revived["srv"].close()
+
+
+def test_client_retry_default_off():
+    srv = CompressdServer("127.0.0.1:0", workers=1, max_request_bytes=1 << 20,
+                          max_inflight_bytes=1 << 20, queue_depth=0).start()
+    with srv:
+        blocker = CompressdClient(srv.address)
+        t = threading.Thread(target=lambda: blocker.request(
+            {"op": "sleep", "seconds": 1.5}, b"b" * (1 << 20)))
+        t.start()
+        time.sleep(0.3)
+        with CompressdClient(srv.address) as c:  # retries=0: shed is surfaced raw
+            with pytest.raises(ServiceOverloadedError):
+                c.request({"op": "sleep", "seconds": 0.1}, b"c" * (1 << 19))
+        t.join()
+        blocker.close()
+
+
+def test_verify_spec_key_accepted(server):
+    x = _field(3)
+    with CompressdClient(server.address) as c:
+        buf = c.compress(x, spec="lossy,rel,1e-3,verify=full")
+        y = c.decompress(buf)
+        rng = float(x.max() - x.min())
+        assert float(np.max(np.abs(x - y))) <= 1e-3 * rng * (1 + 2e-4)

@@ -87,3 +87,59 @@ def test_quality_report_bundle():
     # without the payload the size-dependent entries are omitted
     rep2 = M.quality_report(x, y)
     assert "cr" not in rep2 and "bit_rate" not in rep2
+
+
+# ------------------------------------------------------- non-finite hygiene
+def test_nonfinite_count_union():
+    x = np.zeros((4, 4), np.float32)
+    y = np.zeros((4, 4), np.float32)
+    x[0, 0] = np.nan
+    x[0, 1] = np.inf
+    y[0, 1] = np.nan  # overlaps x's inf: union counts the point once
+    y[3, 3] = -np.inf
+    assert M.nonfinite_count(x) == 2
+    assert M.nonfinite_count(x, y) == 3
+
+
+def test_metrics_mask_nonfinite_points():
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((32, 32)).astype(np.float32)
+    y = x + np.float32(1e-3)
+    ref = {k: getattr(M, k)(x, y) for k in ("psnr", "max_abs_err", "ssim")}
+    xp = x.copy()
+    xp[0, :5] = np.nan
+    xp[1, 0] = np.inf
+    for k, v in ref.items():
+        got = getattr(M, k)(xp, y)
+        assert np.isfinite(got), k
+        assert got == pytest.approx(v, rel=0.15), k
+    # neutralizing the masked points perturbs the spectrum slightly; the
+    # guarantee is finite-and-small, not bit equality with the clean field
+    se = M.spectral_error(xp, y)
+    assert np.isfinite(se) and se < 1e-3
+
+
+def test_max_rel_err_nonfinite_masked():
+    x = np.full((8, 8), 2.0, np.float32)
+    y = x + np.float32(0.5)
+    x[0, 0] = np.nan
+    assert np.isfinite(M.max_rel_err(x, y))
+    assert M.max_rel_err(x, y) == pytest.approx(0.25)
+
+
+def test_all_nonfinite_degenerate():
+    x = np.full((4, 4), np.nan, np.float32)
+    assert M.max_abs_err(x, x) == 0.0
+    assert M.psnr(x, x) == np.inf
+    assert M.nonfinite_count(x) == 16
+
+
+def test_quality_report_counts_nonfinite():
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((24, 24)).astype(np.float32)
+    x[2, :3] = np.nan
+    y = np.where(np.isfinite(x), x, 0.0).astype(np.float32)
+    rep = M.quality_report(x, y)
+    assert rep["n_nonfinite"] == 3
+    for k in ("psnr", "ssim", "spectral_error", "max_abs_err"):
+        assert np.isfinite(rep[k]) or rep[k] == np.inf, k

@@ -149,3 +149,43 @@ def test_constructor_validation():
         CompressorSpec(psnr_target=-1.0)
     with pytest.raises(ValueError):
         CompressorSpec(psnr_target=60.0, eb_mode="pw_rel")
+
+
+# ------------------------------------------------------- verify spec field
+def test_verify_spec_string_roundtrip():
+    sp = CompressorSpec.from_string("lossy,rel,1e-3,verify=full")
+    assert sp.verify == "full"
+    assert CompressorSpec.from_string(sp.to_string()) == sp
+    # the default mode is canonical and omitted from the string form
+    assert "verify" not in CompressorSpec(eb=1e-3).to_string()
+    assert CompressorSpec(eb=1e-3).verify == "sample"
+
+
+def test_verify_spec_validation():
+    with pytest.raises(ValueError):
+        CompressorSpec(verify="always")
+    with pytest.raises(Exception):
+        CompressorSpec.from_string("lossy,rel,1e-3,verify=nope")
+
+
+def test_pw_rel_signed_zero_bits_exact():
+    # -0.0 and +0.0 must both survive with their sign bit intact: the sign
+    # bitmap records signbit over every point, not just the nonzero ones
+    x = np.linspace(-1.0, 1.0, 576, dtype=np.float32).reshape(24, 24)
+    flat = x.reshape(-1)
+    flat[0::7] = 0.0
+    flat[1::7] = -0.0
+    comp = Compressor(CompressorSpec.from_string("lossy,pw_rel,1e-2,autotune=false"))
+    y = comp.decompress(comp.compress(x))
+    zero = x == 0
+    assert np.array_equal(x[zero].view(np.uint32), y[zero].view(np.uint32))
+    assert max_rel_err(x, y) <= 1e-2
+
+
+def test_pw_rel_sub_resolution_names_offender():
+    x = np.linspace(1.0, 5.0, 4096, dtype=np.float32).reshape(64, 64)
+    comp = Compressor(CompressorSpec.from_string("lossy,pw_rel,1e-8"))
+    with pytest.raises(ValueError) as ei:
+        comp.compress(x)
+    msg = str(ei.value)
+    assert "|x|=" in msg and "eb_mode='abs'" in msg  # actionable: names the magnitude
